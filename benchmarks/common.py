@@ -1,0 +1,133 @@
+"""Shared benchmark helpers: timing, CSV emission, the reduced-scale
+experiment harness (dataset + model + train/eval loop) used by the Table 1 /
+Table 3 / Fig 3 reproductions.
+
+Scale note (DESIGN.md §7): the container is one CPU core, so the repro
+model is the paper's architecture at reduced width/depth (≈6M params) with
+every DTI mechanism real — prompts, masks, [SUM] loss, reset, ALiBi — and
+the synthetic MovieLens-like corpus carries a learnable latent-factor
+signal. Ratios (time reduction, quality deltas across paradigms) are the
+reproduction target, not absolute wall-clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.dti import batch_prompts
+from repro.data.synthetic import make_ctr_dataset, split_users
+from repro.launch.train import (build_prompt_sets, evaluate_lm,
+                                make_lm_loss_fn)
+from repro.models.transformer import ModelConfig, init_params
+from repro.train.optimizer import OptimizerConfig
+from repro.train.trainer import init_train_state, make_train_step
+
+ROWS: List[Dict] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append({"name": name, "us_per_call": us_per_call,
+                 "derived": derived})
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6      # us
+
+
+@dataclasses.dataclass
+class ReproSetup:
+    cfg: ModelConfig
+    ds: object
+    splits: tuple
+    n_ctx: int = 10
+    window: int = 0          # 0 = dense full causal at repro scale
+
+    @classmethod
+    def default(cls, *, users=48, items=300, seq=60, seed=0,
+                n_ctx=10) -> "ReproSetup":
+        cfg = get_arch("dti-llama").smoke
+        ds = make_ctr_dataset(n_users=users, n_items=items, seq_len=seq,
+                              vocab_size=cfg.vocab_size, seed=seed,
+                              label_scale=5.0)
+        return cls(cfg, ds, split_users(ds), n_ctx=n_ctx)
+
+
+def run_paradigm(setup: ReproSetup, *, paradigm: str, k: int,
+                 steps: Optional[int] = None, epochs: Optional[float] = None,
+                 batch: int = 8, lr: float = 1e-3, seed: int = 0,
+                 fixes: Optional[Dict[str, bool]] = None) -> Dict:
+    """Train one paradigm variant end-to-end, return metrics + wall clock.
+
+    ``epochs``: full passes over the paradigm's own prompt set — the paper's
+    protocol (SW sees (m-n) prompts/epoch, DTI m/k; the wall-clock ratio at
+    equal epochs IS the Table 3 number). ``steps`` overrides for
+    matched-update comparisons.
+    fixes: {"reset": bool, "pos": bool} — the two bottleneck solutions;
+    both True = DTI, both False = DTI-, ignored for paradigm='sw'.
+    """
+    cfg = setup.cfg
+    fixes = fixes or {"reset": True, "pos": True}
+    if paradigm == "sw":
+        cfg = dataclasses.replace(cfg, dti_reset=False, dti_sum_alibi=False)
+    else:
+        cfg = dataclasses.replace(cfg, dti_reset=fixes["reset"],
+                                  dti_sum_alibi=fixes["pos"])
+
+    max_len = int((setup.n_ctx + (1 if paradigm == "sw" else k))
+                  * (setup.ds.avg_item_tokens + 1.5) + 8)
+    max_len = ((max_len + 63) // 64) * 64
+    train_prompts, test_prompts, test_labels, stats = build_prompt_sets(
+        setup.ds, setup.splits, paradigm="sw" if paradigm == "sw" else "dti",
+        n_ctx=setup.n_ctx, k=k, max_len=max_len)
+    if steps is None:
+        assert epochs is not None
+        steps = max(2, int(round(epochs * len(train_prompts) / batch)))
+
+    params = init_params(jax.random.PRNGKey(seed), cfg)
+    ocfg = OptimizerConfig(lr=lr, schedule="cosine",
+                           warmup_steps=max(5, steps // 10),
+                           total_steps=steps)
+    loss_fn = make_lm_loss_fn(cfg, setup.window)
+    state = init_train_state(params, ocfg)
+    step_fn = make_train_step(loss_fn, ocfg)
+    rng = np.random.default_rng(seed)
+
+    def batches():
+        while True:
+            yield from batch_prompts(train_prompts, batch, rng=rng)
+
+    it = batches()
+    # separate compile from steady-state timing
+    state, _ = step_fn(state, next(it), jax.random.PRNGKey(0))
+    t0 = time.perf_counter()
+    losses = []
+    for i in range(1, steps):
+        state, m = step_fn(state, next(it), jax.random.PRNGKey(i))
+        losses.append(float(m["loss"]))
+    jax.block_until_ready(state.params)
+    train_time = time.perf_counter() - t0
+
+    metrics = evaluate_lm(state.params, cfg, setup.window, test_prompts,
+                          test_labels)
+    return {"paradigm": paradigm, "k": k, "steps": steps,
+            "train_time_s": train_time,
+            "tokens": stats.n_tokens, "prompts": stats.n_prompts,
+            "targets": stats.n_targets,
+            "time_per_target_us": train_time / max(stats.n_targets, 1) * 1e6,
+            "loss_last": float(np.mean(losses[-10:])) if losses else 0.0,
+            **metrics}
+
+
+__all__ = ["emit", "time_fn", "ReproSetup", "run_paradigm", "ROWS"]

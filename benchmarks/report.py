@@ -1,0 +1,62 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def load(mesh):
+    recs = {}
+    for path in sorted(glob.glob(os.path.join(ART, mesh, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def dryrun_table() -> str:
+    single, multi = load("16x16"), load("2x16x16")
+    lines = [
+        "| arch | shape | kind | compile 16x16 / 2x16x16 (s) | "
+        "GiB/dev 16x16 / 2x16x16 | HLO GFLOPs/dev | collective GiB/dev |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for key in single:
+        s, m = single[key], multi.get(key)
+        lines.append(
+            f"| {key[0]} | {key[1]} | {s['kind']} | "
+            f"{s['compile_s']:.1f} / {m['compile_s']:.1f} | "
+            f"{s['per_device']['peak_bytes_est']/2**30:.2f} / "
+            f"{m['per_device']['peak_bytes_est']/2**30:.2f} | "
+            f"{s['per_device']['hlo_flops']/1e9:.1f} | "
+            f"{s['per_device']['collective_bytes']/2**30:.2f} |")
+    return "\n".join(lines)
+
+
+def roofline_table(mesh="16x16") -> str:
+    recs = load(mesh)
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | bound | "
+        "model/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for (a, sh), r in recs.items():
+        rf = r["roofline"]
+        lines.append(
+            f"| {a} | {sh} | {rf['compute_s']:.2e} | {rf['memory_s']:.2e} | "
+            f"{rf['collective_s']:.2e} | {rf['bottleneck']} | "
+            f"{rf['model_flops_ratio']:.2f} | "
+            f"{rf['roofline_fraction']:.5f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print("## Dry-run\n")
+    print(dryrun_table())
+    print("\n## Roofline (16x16)\n")
+    print(roofline_table("16x16"))
+    print("\n## Roofline (2x16x16)\n")
+    print(roofline_table("2x16x16"))

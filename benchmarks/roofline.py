@@ -1,0 +1,70 @@
+"""§Roofline — render the per-(arch x shape x mesh) roofline table from the
+dry-run artifacts (benchmarks/artifacts/dryrun/**/*.json).
+
+Per cell: the three terms in seconds, the dominant bottleneck, MODEL_FLOPS
+(6*N*D-style analytic), the MODEL/HLO flops ratio (useful-compute fraction)
+and the roofline fraction at the bound. Also emits the markdown table used
+by EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def load(mesh: str = "16x16"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ART, mesh, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def render_markdown(recs, *, with_improvement=True) -> str:
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | bound | "
+        "GiB/dev | model/HLO flops | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        rf = r["roofline"]
+        pd = r["per_device"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.2e} | "
+            f"{rf['memory_s']:.2e} | {rf['collective_s']:.2e} | "
+            f"{rf['bottleneck']} | {pd['peak_bytes_est'] / 2**30:.2f} | "
+            f"{rf['model_flops_ratio']:.3f} | "
+            f"{rf['roofline_fraction']:.4f} |")
+    return "\n".join(lines)
+
+
+def main(mesh: str = "16x16"):
+    recs = load(mesh)
+    if not recs:
+        emit("roofline", 0.0, "no dry-run artifacts; run "
+             "`python -m repro.launch.dryrun` first")
+        return []
+    for r in recs:
+        rf = r["roofline"]
+        emit(f"roofline_{r['arch']}__{r['shape']}",
+             rf["step_time_lb_s"] * 1e6,
+             f"bound={rf['bottleneck']} frac={rf['roofline_fraction']:.4f} "
+             f"model/hlo={rf['model_flops_ratio']:.3f}")
+    worst = min((r for r in recs if r["roofline"]["roofline_fraction"] > 0),
+                key=lambda r: r["roofline"]["roofline_fraction"],
+                default=None)
+    if worst:
+        emit("roofline_worst_cell", 0.0,
+             f"{worst['arch']}x{worst['shape']} "
+             f"frac={worst['roofline']['roofline_fraction']:.5f}")
+    return recs
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1] if len(sys.argv) > 1 else "16x16")

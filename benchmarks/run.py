@@ -1,0 +1,38 @@
+"""Benchmark aggregator: one function per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Default mode runs every benchmark at reduced epochs (fits a CPU budget of
+~10-15 min); --full uses the EXPERIMENTS.md settings. Output: CSV rows
+``name,us_per_call,derived`` (also echoed as they are produced).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks import (eq3_flops_reduction, fig3_ablations, kernels_micro,
+                        roofline, table1_ctr_quality, table3_training_time)
+from benchmarks.common import ROWS
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="EXPERIMENTS.md-scale settings (slow)")
+    args = ap.parse_args()
+    quick = not args.full
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    eq3_flops_reduction.main()
+    kernels_micro.main()
+    table3_training_time.main(quick=quick)
+    table1_ctr_quality.main(quick=quick)
+    fig3_ablations.main(quick=quick)
+    roofline.main("16x16")
+    print(f"\n# {len(ROWS)} rows in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

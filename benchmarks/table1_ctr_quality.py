@@ -1,0 +1,63 @@
+"""Paper Table 1 / Figure 2 — CTR quality: SW vs DTI- vs DTI across k.
+
+Reduced-scale reproduction (see benchmarks/common.py): one synthetic
+dataset, the SW baseline, DTI without the bottleneck fixes (DTI-), and full
+DTI, swept over k. The paper's claims being tested:
+
+  1. DTI- degrades monotonically-ish as k grows (hidden-state leakage +
+     positional-bias overfitting);
+  2. DTI with both fixes holds SW-level AUC at every k;
+  3. both at a fraction of SW's wall-clock.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.common import ReproSetup, emit, run_paradigm
+
+OUT = os.path.join(os.path.dirname(__file__), "artifacts",
+                   "table1_ctr_quality.json")
+
+
+def main(ks=(5, 10, 20), epochs: float = 3.0, seeds=(0,), quick=False):
+    setup = ReproSetup.default()
+    if quick:
+        ks, epochs, seeds = (5,), 1.0, (0,)
+    rows = []
+    for seed in seeds:
+        sw = run_paradigm(setup, paradigm="sw", k=1, epochs=epochs,
+                          seed=seed)
+        sw["variant"] = "SW"
+        rows.append(sw)
+        emit(f"table1_sw_seed{seed}", sw["train_time_s"] * 1e6,
+             f"auc={sw['auc']:.4f} logloss={sw['log_loss']:.4f} "
+             f"f1={sw['f1']:.4f}")
+        for k in ks:
+            for variant, fixes in [("DTI-", {"reset": False, "pos": False}),
+                                   ("DTI", {"reset": True, "pos": True})]:
+                r = run_paradigm(setup, paradigm="dti", k=k, epochs=epochs,
+                                 seed=seed, fixes=fixes)
+                r["variant"] = variant
+                rows.append(r)
+                rel = (r["auc"] - sw["auc"]) / sw["auc"] * 100
+                emit(f"table1_{variant.lower()}_k{k}_seed{seed}",
+                     r["train_time_s"] * 1e6,
+                     f"auc={r['auc']:.4f} logloss={r['log_loss']:.4f} "
+                     f"f1={r['f1']:.4f} rel_imp={rel:+.2f}%")
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--epochs", type=float, default=3.0)
+    ap.add_argument("--ks", type=int, nargs="+", default=[5, 10, 20])
+    ap.add_argument("--seeds", type=int, nargs="+", default=[0])
+    a = ap.parse_args()
+    main(ks=tuple(a.ks), epochs=a.epochs, seeds=tuple(a.seeds),
+         quick=a.quick)

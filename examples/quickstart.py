@@ -1,0 +1,63 @@
+"""Quickstart: the DTI training paradigm in ~60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Build a synthetic CTR corpus (MovieLens-like, learnable labels).
+2. Pack user histories into STREAMING prompts (k targets + [SUM] tokens).
+3. Train a small decoder with windowed causal attention + the DTI losses.
+4. Score held-out interactions with the sliding-window serving path.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.dti import batch_prompts, build_streaming_prompts
+from repro.core.metrics import ctr_metrics
+from repro.data.synthetic import make_ctr_dataset, split_users
+from repro.launch.train import (build_prompt_sets, evaluate_lm,
+                                make_lm_loss_fn)
+from repro.models.transformer import init_params
+from repro.train.optimizer import OptimizerConfig
+from repro.train.trainer import init_train_state, make_train_step
+
+K, N_CTX, STEPS = 8, 8, 150
+
+# -- 1. data ----------------------------------------------------------------
+cfg = get_arch("dti-llama").smoke          # the paper's arch, CPU width
+ds = make_ctr_dataset(n_users=32, n_items=200, seq_len=50,
+                      vocab_size=cfg.vocab_size, label_scale=5.0)
+splits = split_users(ds)
+
+# -- 2. streaming prompts (the paradigm) -------------------------------------
+train_prompts, test_prompts, test_labels, stats = build_prompt_sets(
+    ds, splits, paradigm="dti", n_ctx=N_CTX, k=K, max_len=192)
+print(f"{stats.n_prompts} streaming prompts carry {stats.n_targets} targets "
+      f"in {stats.n_tokens} tokens (sliding-window would cost "
+      f"~{K}x more prompt tokens)")
+
+# -- 3. train -----------------------------------------------------------------
+params = init_params(jax.random.PRNGKey(0), cfg)
+ocfg = OptimizerConfig(lr=1e-3, schedule="cosine", warmup_steps=15,
+                       total_steps=STEPS)
+step = make_train_step(make_lm_loss_fn(cfg, window=0), ocfg)
+state = init_train_state(params, ocfg)
+rng = np.random.default_rng(0)
+
+def batches():
+    while True:
+        yield from batch_prompts(train_prompts, 8, rng=rng)
+
+it = batches()
+for i in range(STEPS):
+    state, m = step(state, next(it), jax.random.PRNGKey(i))
+    if i % 30 == 0:
+        print(f"step {i:4d}  loss {float(m['loss']):.4f}")
+
+# -- 4. serve (sliding-window prompts, [SUM] readout) -------------------------
+metrics = evaluate_lm(state.params, cfg, 0, test_prompts, test_labels)
+print(f"test: AUC={metrics['auc']:.4f}  LogLoss={metrics['log_loss']:.4f} "
+      f"F1={metrics['f1']:.4f}")
+assert metrics["auc"] > 0.6, "expected learnable signal"
+print("quickstart OK")

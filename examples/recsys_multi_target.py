@@ -1,0 +1,79 @@
+"""The DTI idea transplanted to a conventional CTR model (DIN).
+
+    PYTHONPATH=src python examples/recsys_multi_target.py
+
+DIN recomputes target-attention over a user's history once per candidate —
+the same redundancy the paper eliminates for LLM context. ``din_forward_multi``
+shares one history-embedding pass across k targets (DESIGN.md
+§Arch-applicability: "partial" DTI). This example measures the training-step
+speedup and verifies the multi-target scores equal k single-target passes.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models.recsys import (bce_loss, din_forward, din_forward_multi,
+                                 init_din)
+
+import dataclasses
+
+# production-shaped table (the smoke config's 1k-row table hides the shared
+# cost: what DTI shares in DIN is the history gather + its gradient scatter,
+# which only dominates once the table is large)
+cfg = dataclasses.replace(get_arch("din").smoke, n_items=1_000_000,
+                          embed_dim=32, seq_len=100)
+params = init_din(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(0)
+B, L, K = 256, cfg.seq_len, 8
+hist = jnp.asarray(rng.integers(0, cfg.n_items, (B, L)), jnp.int32)
+targets = jnp.asarray(rng.integers(0, cfg.n_items, (B, K)), jnp.int32)
+labels = jnp.asarray(rng.integers(0, 2, (B, K)), jnp.float32)
+
+# correctness: multi-target == K single-target passes
+multi = din_forward_multi(params, cfg, hist, targets)
+for j in range(K):
+    single = din_forward(params, cfg, hist, targets[:, j])
+    np.testing.assert_allclose(multi[:, j], single, atol=1e-5)
+print(f"multi-target DIN == {K} single passes (max diff "
+      f"{float(jnp.max(jnp.abs(multi[:, 0] - din_forward(params, cfg, hist, targets[:, 0])))):.1e})")
+
+
+def time_fn(f, *a, iters=10):
+    jax.block_until_ready(f(*a))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*a)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e3
+
+
+# The sliding-window protocol delivers each (user, target) pair in its own
+# minibatch, so the history gather + gradient scatter repeat per step —
+# K separate jitted invocations below. (Folding the K passes into ONE graph
+# would let XLA CSE the shared gather, which is precisely the optimization
+# DTI makes structural rather than accidental.)
+@jax.jit
+def grad_single_step(p, hist, target, label):
+    def loss(p):
+        return bce_loss(din_forward(p, cfg, hist, target), label)
+    return jax.grad(loss)(p)
+
+
+@jax.jit
+def grad_multi(p, hist, targets, labels):
+    def loss(p):
+        return bce_loss(din_forward_multi(p, cfg, hist, targets).reshape(-1),
+                        labels.reshape(-1))
+    return jax.grad(loss)(p)
+
+
+t_one = time_fn(grad_single_step, params, hist, targets[:, 0], labels[:, 0])
+t1 = t_one * K
+t2 = time_fn(grad_multi, params, hist, targets, labels)
+print(f"train cost for {K} targets/user: SW protocol = {K} steps x "
+      f"{t_one:.1f} ms = {t1:.1f} ms, multi-target (DTI) = {t2:.1f} ms "
+      f"->  {t1 / t2:.2f}x speedup")
+print("recsys multi-target example OK")

@@ -1,0 +1,68 @@
+"""Serving example: batched CTR scoring + the windowed ring-buffer decode.
+
+    PYTHONPATH=src python examples/serve_ctr.py
+
+Part 1 — the paper's inference procedure: sliding-window prompts scored in
+batches through CTRServer (one [SUM] readout per request, bi-dimensional
+softmax -> p(click)).
+
+Part 2 — the beyond-paper corollary: because training used windowed causal
+attention, a user's *stream* can be scored incrementally with a ring-buffer
+KV cache whose size never grows — position 10,000 costs exactly as much as
+position 100 (this is what makes the long_500k production shape feasible).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.dti import SpecialTokens, build_sliding_prompts
+from repro.data.synthetic import make_ctr_dataset
+from repro.models.transformer import init_params
+from repro.serve.cache import init_lm_cache
+from repro.serve.engine import CTRServer, make_decode_fn
+
+SP = SpecialTokens()
+cfg = get_arch("dti-llama").smoke
+params = init_params(jax.random.PRNGKey(0), cfg)
+ds = make_ctr_dataset(n_users=4, n_items=100, seq_len=40,
+                      vocab_size=cfg.vocab_size)
+
+# -- Part 1: batched sliding-window scoring ----------------------------------
+toks, labels = ds.user_prompt_material(0)
+prompts = build_sliding_prompts(toks, labels, n_ctx=6, max_len=128)
+server = CTRServer(params, cfg, max_len=128)
+t0 = time.perf_counter()
+scores = server.score(prompts[:16])
+dt = time.perf_counter() - t0
+print(f"scored {len(scores)} requests in {dt*1e3:.1f} ms "
+      f"(p_click range {min(scores):.3f}..{max(scores):.3f})")
+
+# -- Part 2: incremental stream scoring with a ring cache ---------------------
+WINDOW, CAP = 48, 64
+decode = jax.jit(make_decode_fn(cfg, window=WINDOW, ring=True),
+                 donate_argnums=(1,))
+cache = init_lm_cache(cfg, batch=1, capacity=CAP)
+stream, stream_labels = [], []
+for t, lab in zip(toks, labels):
+    stream.extend(t + [SP.sum])
+    stream_labels.extend([None] * len(t) + [int(lab)])
+
+p_hist = []
+t0 = time.perf_counter()
+for pos, (tok, lab) in enumerate(zip(stream, stream_labels)):
+    p, cache = decode(params, cache,
+                      jnp.asarray([[tok]], jnp.int32),
+                      jnp.asarray([[pos]], jnp.int32),
+                      jnp.asarray([[tok == SP.sum]]))
+    if lab is not None:
+        p_hist.append((pos, float(p[0, 0]), lab))
+dt = time.perf_counter() - t0
+print(f"streamed {len(stream)} tokens through a {CAP}-slot ring cache in "
+      f"{dt:.1f}s ({len(p_hist)} targets scored); cache bytes constant "
+      f"regardless of stream length")
+for pos, p, lab in p_hist[:5]:
+    print(f"  pos {pos:4d}: p_click={p:.3f} label={lab}")
+print("serve example OK")

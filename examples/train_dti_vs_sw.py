@@ -1,0 +1,43 @@
+"""End-to-end driver: sliding-window vs DTI on one dataset, full runtime.
+
+    PYTHONPATH=src python examples/train_dti_vs_sw.py [--k 10] [--epochs 2]
+
+This is the deliverable (b) training driver at container scale: the same
+``repro.launch.train`` stack the production launcher uses — checkpointing
+(atomic keep-k, resume), straggler monitor, cosine schedule — applied to
+both paradigms back to back, finishing with the wall-clock and quality
+comparison that is the paper's headline result.
+"""
+import argparse
+import shutil
+import tempfile
+
+from benchmarks.common import ReproSetup, run_paradigm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--epochs", type=float, default=1.0)
+    args = ap.parse_args()
+
+    setup = ReproSetup.default()
+    print(f"== sliding-window baseline ({args.epochs} epochs) ==")
+    sw = run_paradigm(setup, paradigm="sw", k=1, epochs=args.epochs)
+    print(f"   time {sw['train_time_s']:.1f}s  AUC {sw['auc']:.4f} "
+          f"LogLoss {sw['log_loss']:.4f}")
+
+    print(f"== DTI k={args.k} ({args.epochs} epochs) ==")
+    dti = run_paradigm(setup, paradigm="dti", k=args.k, epochs=args.epochs)
+    print(f"   time {dti['train_time_s']:.1f}s  AUC {dti['auc']:.4f} "
+          f"LogLoss {dti['log_loss']:.4f}")
+
+    red = (1 - dti["train_time_s"] / sw["train_time_s"]) * 100
+    print(f"\nDTI trained in {dti['train_time_s']:.1f}s vs SW "
+          f"{sw['train_time_s']:.1f}s  ->  {red:.1f}% reduction "
+          f"(paper: ~80-92% for k=10..50), "
+          f"dAUC = {dti['auc'] - sw['auc']:+.4f}")
+
+
+if __name__ == "__main__":
+    main()

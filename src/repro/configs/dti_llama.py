@@ -1,0 +1,36 @@
+"""dti-llama — the paper's own setup: Llama-3.1-8B + LoRA + DTI training.
+
+[arXiv:2407.21783 for the backbone; the DTI paper fine-tunes it with LoRA
+rank {8,16} on q,k,v,o,up,down,gate.] Not one of the 40 assigned cells, but
+the configuration the reproduction experiments and examples are anchored to.
+``REPRO`` is the width-reduced variant every CPU experiment trains for real.
+"""
+from repro.configs.base import ArchSpec, lm_shapes
+from repro.models.transformer import ModelConfig
+
+FULL = ModelConfig(
+    name="dti-llama-8b", n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab_size=128256, head_dim=128, attn_type="gqa",
+    rope_theta=500000.0, window=1024, attn_impl="blocked",
+    dti_sum_token=True, param_dtype="bfloat16", compute_dtype="bfloat16",
+    remat=True, lora_rank=8,
+)
+
+# The CPU-trainable repro model (≈6M params): full DTI machinery, small dims.
+REPRO = ModelConfig(
+    name="dti-llama-repro", n_layers=4, d_model=128, n_heads=4, n_kv_heads=2,
+    d_ff=344, vocab_size=2048, head_dim=32, attn_type="gqa",
+    rope_theta=10000.0, window=0, attn_impl="dense",
+    dti_sum_token=True, remat=False,
+)
+
+SMOKE = REPRO
+
+
+def spec() -> ArchSpec:
+    return ArchSpec(
+        name="dti-llama", family="lm", config=FULL, smoke=SMOKE,
+        shapes=lm_shapes(), profile="tp", trainable="lora",
+        source="arXiv:2407.21783 backbone; DTI paper appendix",
+        notes="The paper's own arch; repro experiments use REPRO.",
+    )

@@ -1,0 +1,9 @@
+"""repro.core — the paper's contribution (DTI training paradigm) in JAX."""
+from repro.core.windowed import (ResetConfig, attention, attention_blocked,
+                                 attention_dense, dti_mask, reset_alpha)
+from repro.core.dti import (PromptStats, SpecialTokens, batch_prompts,
+                            build_sliding_prompts, build_streaming_prompts,
+                            window_tokens)
+from repro.core.losses import ctr_logits, ctr_loss, lm_loss
+from repro.core.metrics import auc, ctr_metrics, f1, log_loss
+from repro.core import flops

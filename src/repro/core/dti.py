@@ -1,0 +1,144 @@
+"""DTI prompt formulation: sliding-window (baseline) and streaming prompts.
+
+Data-pipeline side of the paper (sections 3.1, 3.2, 3.4): pure numpy, feeds
+the jitted train step with fixed-shape padded batches:
+
+  tokens    (L,) int32
+  positions (L,) int32   physical token index (what window masks use)
+  is_sum    (L,) bool    [SUM] readout positions
+  labels    (L,) int32   1='yes' at SUM positions, 0 elsewhere/negative
+  valid     (L,) bool    padding mask
+
+The sliding-window builder emits one prompt per target (stride 1); the
+streaming builder emits one prompt per k targets (stride k) with a [SUM]
+token after each target. Token budget bookkeeping (`PromptStats`) feeds the
+Eq. 3 validation benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SpecialTokens:
+    pad: int = 0
+    bos: int = 1
+    sum: int = 2
+    yes: int = 3
+    no: int = 4
+    sep: int = 5
+    n_reserved: int = 8
+
+
+@dataclasses.dataclass
+class PromptStats:
+    n_prompts: int = 0
+    n_tokens: int = 0          # non-pad tokens fed to the model
+    n_targets: int = 0         # supervised [SUM] positions
+
+    def add(self, tokens: int, targets: int):
+        self.n_prompts += 1
+        self.n_tokens += tokens
+        self.n_targets += targets
+
+
+def _pad_to(arr: np.ndarray, length: int, fill=0) -> np.ndarray:
+    out = np.full((length,), fill, dtype=arr.dtype)
+    out[: len(arr)] = arr[:length]
+    return out
+
+
+def _pack(tokens: List[int], is_sum: List[bool], labels: List[int],
+          max_len: int, sp: SpecialTokens) -> Dict[str, np.ndarray]:
+    n = len(tokens)
+    assert n <= max_len, f"prompt length {n} > max_len {max_len}"
+    t = _pad_to(np.asarray(tokens, np.int32), max_len, sp.pad)
+    s = _pad_to(np.asarray(is_sum, bool), max_len, False)
+    l = _pad_to(np.asarray(labels, np.int32), max_len, 0)
+    valid = np.zeros((max_len,), bool)
+    valid[:n] = True
+    return {"tokens": t, "is_sum": s, "labels": l, "valid": valid,
+            "positions": np.arange(max_len, dtype=np.int32)}
+
+
+def build_sliding_prompts(
+    item_tokens: Sequence[Sequence[int]], labels: Sequence[int], *,
+    n_ctx: int, max_len: int, sp: SpecialTokens = SpecialTokens(),
+    stats: PromptStats | None = None,
+) -> List[Dict[str, np.ndarray]]:
+    """One prompt per target interaction i in [n_ctx, m): context =
+    interactions [i-n_ctx, i), then the target, then [SUM]."""
+    m = len(item_tokens)
+    out = []
+    for i in range(n_ctx, m):
+        toks: List[int] = [sp.bos]
+        for j in range(i - n_ctx, i + 1):
+            toks.extend(item_tokens[j])
+        toks.append(sp.sum)
+        is_sum = [False] * (len(toks) - 1) + [True]
+        lab = [0] * (len(toks) - 1) + [int(labels[i])]
+        if stats is not None:
+            stats.add(len(toks), 1)
+        out.append(_pack(toks, is_sum, lab, max_len, sp))
+    return out
+
+
+def build_streaming_prompts(
+    item_tokens: Sequence[Sequence[int]], labels: Sequence[int], *,
+    n_ctx: int, k: int, max_len: int, sp: SpecialTokens = SpecialTokens(),
+    stats: PromptStats | None = None,
+) -> List[Dict[str, np.ndarray]]:
+    """Stride-k traversal: each prompt = n_ctx context interactions followed
+    by up to k (target, [SUM]) groups (paper fig. 1.ii(a), fig. 5)."""
+    m = len(item_tokens)
+    out = []
+    i = n_ctx
+    while i < m:
+        targets = list(range(i, min(i + k, m)))
+        toks: List[int] = [sp.bos]
+        for j in range(i - n_ctx, i):
+            toks.extend(item_tokens[j])
+        is_sum = [False] * len(toks)
+        lab = [0] * len(toks)
+        for j in targets:
+            toks.extend(item_tokens[j])
+            is_sum.extend([False] * len(item_tokens[j]))
+            lab.extend([0] * len(item_tokens[j]))
+            toks.append(sp.sum)
+            is_sum.append(True)
+            lab.append(int(labels[j]))
+        if stats is not None:
+            stats.add(len(toks), len(targets))
+        out.append(_pack(toks, is_sum, lab, max_len, sp))
+        i += k
+    return out
+
+
+def batch_prompts(prompts: List[Dict[str, np.ndarray]],
+                  batch_size: int, *, drop_remainder: bool = False,
+                  rng: np.random.Generator | None = None):
+    """Yield stacked batches (shuffled if rng given)."""
+    idx = np.arange(len(prompts))
+    if rng is not None:
+        rng.shuffle(idx)
+    for s in range(0, len(idx), batch_size):
+        sel = idx[s: s + batch_size]
+        if len(sel) < batch_size:
+            if drop_remainder:
+                return
+            sel = np.concatenate([sel, idx[: batch_size - len(sel)]])
+        yield {key: np.stack([prompts[i][key] for i in sel])
+               for key in prompts[0]}
+
+
+def window_tokens(n_ctx: int, avg_item_tokens: float, cap: int = 1024) -> int:
+    """Token-level attention window covering n_ctx interactions, capped
+    (the paper caps at 1024)."""
+    return int(min(cap, round(n_ctx * (avg_item_tokens + 0.5) + 2)))
+
+
+__all__ = ["SpecialTokens", "PromptStats", "build_sliding_prompts",
+           "build_streaming_prompts", "batch_prompts", "window_tokens"]

@@ -1,0 +1,88 @@
+"""Losses: the DTI CTR objective (SUM-token yes/no) and chunked LM loss."""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+if TYPE_CHECKING:  # avoid core <-> models import cycle
+    from repro.models.transformer import ModelConfig
+
+
+def ctr_logits(params: Params, cfg: "ModelConfig", hidden: jax.Array,
+               yes_id: int, no_id: int) -> jax.Array:
+    """Bi-dimensional (yes, no) logits at every position: (B, S, 2).
+
+    Touches only two rows of the vocab matrix — the DTI training step never
+    materialises (B, S, V) logits.
+    """
+    w = params["embed"] if cfg.tie_embeddings else params["lm_head"]["w"].T
+    rows = jnp.stack([w[yes_id], w[no_id]]).astype(hidden.dtype)   # (2, d)
+    return jnp.einsum("bsd,vd->bsv", hidden, rows)
+
+
+def ctr_loss(params: Params, cfg: "ModelConfig", hidden: jax.Array,
+             sum_mask: jax.Array, labels: jax.Array, *,
+             yes_id: int, no_id: int) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """DTI objective: cross-entropy of yes/no at each [SUM] position.
+
+    sum_mask: (B, S) bool — [SUM] positions carrying a label.
+    labels:   (B, S) {0,1} int — 1 = 'yes' (click), aligned to sum positions.
+    Returns (mean loss, dict(probs, mask)) — probs is p(click) per position.
+    """
+    logits2 = ctr_logits(params, cfg, hidden, yes_id, no_id).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits2, axis=-1)            # (B,S,2)
+    lab = labels.astype(jnp.int32)
+    nll = -jnp.where(lab == 1, logp[..., 0], logp[..., 1])  # (B,S)
+    w = sum_mask.astype(jnp.float32)
+    loss = jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+    p_click = jnp.exp(logp[..., 0])
+    return loss, {"p_click": p_click, "mask": sum_mask}
+
+
+def lm_loss(params: Params, cfg: "ModelConfig", hidden: jax.Array,
+            targets: jax.Array, valid: Optional[jax.Array] = None) -> jax.Array:
+    """Next-token cross entropy. Chunked over the vocab when
+    ``cfg.logits_chunk > 0`` so (B, S, V) fp32 logits never exist."""
+    w = (params["embed"] if cfg.tie_embeddings else params["lm_head"]["w"].T)
+    v, d = w.shape
+    h = hidden.astype(jnp.float32)
+    wmask = jnp.ones(targets.shape, jnp.float32) if valid is None \
+        else valid.astype(jnp.float32)
+
+    if cfg.logits_chunk <= 0 or v % cfg.logits_chunk != 0:
+        logits = jnp.einsum("bsd,vd->bsv", h, w.astype(jnp.float32))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - tgt) * wmask) / jnp.maximum(jnp.sum(wmask), 1.0)
+
+    c = cfg.logits_chunk
+    nc = v // c
+    wc = w.reshape(nc, c, d).astype(jnp.float32)
+
+    def body(carry, inp):
+        m, s, tgt = carry
+        wi, base = inp
+        logits = jnp.einsum("bsd,cd->bsc", h, wi)              # (B,S,c)
+        mi = jnp.max(logits, axis=-1)
+        m_new = jnp.maximum(m, mi)
+        s = s * jnp.exp(m - m_new) + jnp.sum(
+            jnp.exp(logits - m_new[..., None]), axis=-1)
+        in_chunk = (targets >= base) & (targets < base + c)
+        local = jnp.clip(targets - base, 0, c - 1)
+        t_val = jnp.take_along_axis(logits, local[..., None], axis=-1)[..., 0]
+        tgt = jnp.where(in_chunk, t_val, tgt)
+        return (m_new, s, tgt), None
+
+    init = (jnp.full(targets.shape, -jnp.inf, jnp.float32),
+            jnp.zeros(targets.shape, jnp.float32),
+            jnp.zeros(targets.shape, jnp.float32))
+    bases = jnp.arange(nc, dtype=jnp.int32) * c
+    (m, s, tgt), _ = jax.lax.scan(body, init, (wc, bases))
+    lse = m + jnp.log(s)
+    return jnp.sum((lse - tgt) * wmask) / jnp.maximum(jnp.sum(wmask), 1.0)
+
+
+__all__ = ["ctr_logits", "ctr_loss", "lm_loss"]

@@ -1,0 +1,6 @@
+"""repro.data — synthetic corpora, tokenizer, prompt assembly, samplers."""
+from repro.data.tokenizer import HashTokenizer
+from repro.data.synthetic import CTRDataset, make_ctr_dataset, split_users
+from repro.data.sampler import (Graph, SampledSubgraph, make_community_graph,
+                                make_molecule_batch, sample_neighbors)
+from repro.data.recsys_gen import RecsysGenerator

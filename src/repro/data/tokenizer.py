@@ -1,0 +1,45 @@
+"""Deterministic hash word-piece tokenizer (offline container, no HF).
+
+Words map to stable ids in [n_reserved, vocab) via FNV-1a; special tokens
+(PAD/BOS/SUM/YES/NO/SEP) live below n_reserved and match
+``repro.core.dti.SpecialTokens``.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core.dti import SpecialTokens
+
+
+def _fnv1a(s: str) -> int:
+    h = 0x811C9DC5
+    for ch in s.encode():
+        h = ((h ^ ch) * 0x01000193) & 0xFFFFFFFF
+    return h
+
+
+class HashTokenizer:
+    def __init__(self, vocab_size: int = 8192,
+                 sp: SpecialTokens = SpecialTokens()):
+        assert vocab_size > sp.n_reserved
+        self.vocab_size = vocab_size
+        self.sp = sp
+
+    def token_id(self, word: str) -> int:
+        span = self.vocab_size - self.sp.n_reserved
+        return self.sp.n_reserved + _fnv1a(word.lower()) % span
+
+    def encode(self, text: str) -> List[int]:
+        return [self.token_id(w) for w in text.split()]
+
+    def encode_item(self, title: str, genres: str, rating: int) -> List[int]:
+        """Tokenise one interaction the way the paper's prompts do:
+        'title: ... genres: ... rating: r' separated from neighbours."""
+        toks = [self.sp.sep]
+        toks += self.encode(title)
+        toks += [self.token_id(f"genre={genres}")]
+        toks += [self.token_id(f"rating={rating}")]
+        return toks
+
+
+__all__ = ["HashTokenizer"]

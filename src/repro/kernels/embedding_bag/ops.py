@@ -1,0 +1,44 @@
+"""jit'd wrapper for the EmbeddingBag kernel (sum / mean, masked)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.embedding_bag import embedding_bag_pallas
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:  # noqa: BLE001
+        return False
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array,
+                  valid: Optional[jax.Array] = None, *,
+                  mode: str = "sum",
+                  weights: Optional[jax.Array] = None,
+                  interpret: Optional[bool] = None) -> jax.Array:
+    """ids (B, H) -> (B, D); masked, optionally weighted, sum or mean."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, h = ids.shape
+    w = jnp.ones((b, h), jnp.float32) if weights is None \
+        else weights.astype(jnp.float32)
+    if valid is not None:
+        w = w * valid.astype(jnp.float32)
+    if mode == "mean":
+        n = (valid.sum(axis=-1, keepdims=True).astype(jnp.float32)
+             if valid is not None else jnp.full((b, 1), float(h)))
+        w = w / jnp.maximum(n, 1.0)
+    elif mode != "sum":
+        raise ValueError(f"kernel supports sum/mean, got {mode!r}")
+    # masked ids may be out of range: clamp (their weight is already 0)
+    ids = jnp.clip(ids, 0, table.shape[0] - 1)
+    return embedding_bag_pallas(table, ids, w,
+                                interpret=interpret).astype(table.dtype)
+
+
+__all__ = ["embedding_bag"]

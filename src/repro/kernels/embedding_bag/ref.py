@@ -1,0 +1,5 @@
+"""Pure-jnp oracle for the EmbeddingBag kernel: the substrate implementation
+in ``repro.sparse.embedding`` (take + masked sum) IS the reference."""
+from repro.sparse.embedding import embedding_bag as reference_embedding_bag
+
+__all__ = ["reference_embedding_bag"]

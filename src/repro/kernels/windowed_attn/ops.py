@@ -1,0 +1,65 @@
+"""jit'd public wrapper: same signature as ``repro.core.windowed.attention_dense``.
+
+Transposes (B, S, H, D) -> (B, H, S, D) for the kernel's tiling, forwards
+every DTI option, and untransposes. ``interpret=True`` by default off-TPU so
+the kernel body runs (and is tested) on CPU; on TPU it compiles to Mosaic.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.windowed import ResetConfig
+from repro.kernels.windowed_attn.windowed_attn import windowed_attention_bhsd
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:  # noqa: BLE001
+        return False
+
+
+def windowed_attention(
+    q: jax.Array,                      # (B, Sq, H, D)
+    k: jax.Array,                      # (B, Sk, Hk, D)
+    v: jax.Array,                      # (B, Sk, Hk, Dv)
+    *,
+    pos_q: jax.Array,
+    pos_k: jax.Array,
+    window: int,
+    is_sum_q: Optional[jax.Array] = None,
+    is_sum_k: Optional[jax.Array] = None,
+    valid_k: Optional[jax.Array] = None,
+    q_nope: Optional[jax.Array] = None,
+    k_nope: Optional[jax.Array] = None,
+    alibi: Optional[jax.Array] = None,
+    v0: Optional[jax.Array] = None,
+    reset: Optional[ResetConfig] = None,
+    sum_isolated: bool = True,
+    scale: Optional[float] = None,
+    block_size: int = 256,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    assert window > 0, "pallas path needs a window"
+    if interpret is None:
+        interpret = not _on_tpu()
+    t = lambda x: None if x is None else jnp.swapaxes(x, 1, 2)
+    use_nope = q_nope is not None and is_sum_q is not None
+    out = windowed_attention_bhsd(
+        t(q), t(k), t(v), pos_q, pos_k, window=window,
+        sum_q=is_sum_q, sum_k=is_sum_k, valid_k=valid_k,
+        q_nope=t(q_nope) if use_nope else None,
+        k_nope=t(k_nope) if use_nope else None,
+        alibi=alibi if use_nope else None,
+        v0=t(v0) if (reset is not None and v0 is not None) else None,
+        reset=((reset.y_min, reset.y_max, reset.midpoint)
+               if reset is not None and v0 is not None else None),
+        sum_isolated=sum_isolated and is_sum_k is not None,
+        scale=scale, block_size=block_size, interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)
+
+
+__all__ = ["windowed_attention"]

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the windowed_attn kernel.
+
+The reference is ``repro.core.windowed.attention_dense`` — the exact DTI
+attention the paper defines (window mask, SUM isolation, SUM NoPE+ALiBi,
+distance-based reset), materialising the full (Sq, Sk) score matrix. The
+kernel tests sweep shapes/dtypes/feature-flags and assert allclose against
+this function.
+"""
+from repro.core.windowed import attention_dense as reference_attention
+
+__all__ = ["reference_attention"]

@@ -1,0 +1,215 @@
+"""Pallas TPU kernel: flash-style windowed causal attention with the DTI
+semantics fused (SUM isolation, SUM NoPE+ALiBi dual scores, distance-based
+hidden-state reset) — the compute hot-spot of the paper's training step.
+
+TPU adaptation (DESIGN.md §3): the paper's GPU implementation is a masked
+SDPA; here the window becomes a *blocked local* schedule tuned for the MXU
+and VMEM:
+
+  grid = (B, H, n_q_blocks, n_kv_blocks)     n_kv = window//blk + 1
+
+Each (q-block, kv-block) step stages (blk, D) tiles HBM->VMEM, runs the
+score matmul on the MXU in fp32, applies every DTI mask term via index
+arithmetic (no S x S mask ever materialises), and maintains an online-
+softmax accumulator in VMEM scratch across the kv dimension (declared
+"arbitrary" so the accumulator carries). The hidden-state reset rides the
+same pass as a second value stream: acc_r += w * a(d) * (v0 - v), folded
+into the final normalisation — zero extra HBM traffic for the reset beyond
+reading v0.
+
+All mask/positional inputs are int32 (pos) / int32 (flags) so the kernel
+has no sub-byte loads. GQA is handled by index-mapping query head h onto
+kv head h // n_rep — K/V are never repeated in memory.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pos_q_ref, pos_k_ref, sum_q_ref, sum_k_ref, valid_k_ref,
+            alibi_ref,
+            q_ref, k_ref, v_ref, qn_ref, kn_ref, v0_ref,
+            o_ref,
+            m_ref, l_ref, acc_ref,
+            *, blk: int, n_kv: int, window: int, scale: float,
+            sum_isolated: bool, use_nope: bool, use_reset: bool,
+            y_min: float, y_max: float, midpoint: float):
+    ikv = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ikv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                   # (blk, D)
+    k = k_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    pos_q = pos_q_ref[0]                                  # (blk,) int32
+    pos_k = pos_k_ref[0]
+    d = pos_q[:, None] - pos_k[None, :]                   # (blk, blk)
+    sum_q = sum_q_ref[0] != 0                             # (blk,)
+
+    if use_nope:
+        qn = qn_ref[0, 0].astype(jnp.float32)
+        kn = kn_ref[0, 0].astype(jnp.float32)
+        sn = jax.lax.dot_general(qn, kn, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * scale
+        sn = sn - alibi_ref[0] * d.astype(jnp.float32)
+        s = jnp.where(sum_q[:, None], sn, s)
+
+    # mask: causal + window + key-padding (+ SUM isolation) + real kv block
+    mask = (d >= 0) & (d <= window) & (valid_k_ref[0] != 0)[None, :]
+    if sum_isolated:
+        mask &= (sum_k_ref[0] == 0)[None, :] | (d == 0)
+    j_actual = iq - (n_kv - 1) + ikv
+    mask &= j_actual >= 0                                  # clamped block
+    s = jnp.where(mask, s, NEG_INF)
+
+    # online softmax
+    m_prev = m_ref[:, 0]                                   # (blk,)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    w = jnp.exp(s - m_new[:, None])
+    w = jnp.where(mask, w, 0.0)
+    l_ref[:, 0] = l_ref[:, 0] * alpha + jnp.sum(w, axis=-1)
+    m_ref[:, 0] = m_new
+
+    v = v_ref[0, 0].astype(jnp.float32)
+    acc = acc_ref[...] * alpha[:, None]
+    acc += jax.lax.dot_general(w, v, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    if use_reset:
+        a = y_min + (y_max - y_min) * jax.nn.sigmoid(
+            d.astype(jnp.float32) - midpoint)
+        wr = w * a * sum_q[:, None].astype(jnp.float32)
+        dv = v0_ref[0, 0].astype(jnp.float32) - v
+        acc += jax.lax.dot_general(wr, dv, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+    acc_ref[...] = acc
+
+    @pl.when(ikv == n_kv - 1)
+    def _finish():
+        l = l_ref[:, 0]
+        safe = jnp.where(l > 0, l, 1.0)
+        o_ref[0, 0, ...] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def windowed_attention_bhsd(
+    q: jax.Array,                 # (B, H, S, D)   RoPE'd queries
+    k: jax.Array,                 # (B, Hk, S, D)  RoPE'd keys
+    v: jax.Array,                 # (B, Hk, S, D)
+    pos_q: jax.Array,             # (B, S) int32
+    pos_k: jax.Array,             # (B, S) int32
+    *,
+    window: int,
+    sum_q: Optional[jax.Array] = None,     # (B, S) int32 flags
+    sum_k: Optional[jax.Array] = None,
+    valid_k: Optional[jax.Array] = None,
+    q_nope: Optional[jax.Array] = None,    # (B, H, S, D)
+    k_nope: Optional[jax.Array] = None,    # (B, Hk, S, D)
+    alibi: Optional[jax.Array] = None,     # (H,) f32
+    v0: Optional[jax.Array] = None,        # (B, Hk, S, D)
+    reset: Optional[tuple] = None,         # (y_min, y_max, midpoint)
+    sum_isolated: bool = True,
+    scale: Optional[float] = None,
+    block_size: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, s, d = q.shape
+    hk = k.shape[1]
+    n_rep = h // hk
+    blk = min(block_size, s)
+    assert s % blk == 0, f"S={s} not divisible by block {blk}"
+    if scale is None:
+        scale = d ** -0.5
+    n_q = s // blk
+    n_kv = min(window // blk + 1, n_q) + (0 if window % blk == 0 else 1)
+    n_kv = min(max(n_kv, 1), n_q)
+
+    use_nope = q_nope is not None
+    use_reset = reset is not None and v0 is not None
+    i32 = functools.partial(jnp.asarray, dtype=jnp.int32)
+    sum_q_i = i32(sum_q if sum_q is not None else jnp.zeros((b, s)))
+    sum_k_i = i32(sum_k if sum_k is not None else jnp.zeros((b, s)))
+    valid_i = i32(valid_k if valid_k is not None else jnp.ones((b, s)))
+    alibi_f = (alibi if alibi is not None
+               else jnp.zeros((h,))).astype(jnp.float32)
+    zero_bh = jnp.zeros((b, 1, s, d), q.dtype)
+    qn = q_nope if use_nope else zero_bh
+    kn = k_nope if use_nope else zero_bh
+    v0_ = v0 if use_reset else zero_bh
+    y_min, y_max, midpoint = reset if use_reset else (0.0, 0.0, 0.0)
+
+    def kv_idx(bi, hi, qi, ki):
+        j = qi - (n_kv - 1) + ki
+        return (bi, hi // n_rep, jnp.maximum(j, 0), 0)
+
+    def kvh_idx(bi, hi, qi, ki):          # for arrays already (B,1,S,D)
+        j = qi - (n_kv - 1) + ki
+        return (bi, 0, jnp.maximum(j, 0), 0)
+
+    def seq_q_idx(bi, hi, qi, ki):
+        return (bi, qi)
+
+    def seq_k_idx(bi, hi, qi, ki):
+        j = qi - (n_kv - 1) + ki
+        return (bi, jnp.maximum(j, 0))
+
+    kn_map = kv_idx if use_nope and k_nope.shape[1] == hk else kvh_idx
+    qn_map = ((lambda bi, hi, qi, ki: (bi, hi, qi, 0))
+              if use_nope else kvh_idx)
+    v0_map = kv_idx if use_reset else kvh_idx
+
+    grid = (b, h, n_q, n_kv)
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, blk=blk, n_kv=n_kv, window=window, scale=scale,
+            sum_isolated=sum_isolated, use_nope=use_nope,
+            use_reset=use_reset, y_min=float(y_min), y_max=float(y_max),
+            midpoint=float(midpoint)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk), seq_q_idx),                  # pos_q
+            pl.BlockSpec((1, blk), seq_k_idx),                  # pos_k
+            pl.BlockSpec((1, blk), seq_q_idx),                  # sum_q
+            pl.BlockSpec((1, blk), seq_k_idx),                  # sum_k
+            pl.BlockSpec((1, blk), seq_k_idx),                  # valid_k
+            pl.BlockSpec((1,), lambda bi, hi, qi, ki: (hi,)),   # alibi
+            pl.BlockSpec((1, 1, blk, d),
+                         lambda bi, hi, qi, ki: (bi, hi, qi, 0)),  # q
+            pl.BlockSpec((1, 1, blk, d), kv_idx),               # k
+            pl.BlockSpec((1, 1, blk, d), kv_idx),               # v
+            pl.BlockSpec((1, 1, blk, d), qn_map),               # qn
+            pl.BlockSpec((1, 1, blk, d), kn_map),               # kn
+            pl.BlockSpec((1, 1, blk, d), v0_map),               # v0
+        ],
+        out_specs=pl.BlockSpec((1, 1, blk, d),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk, 1), jnp.float32),      # m (row max)
+            pltpu.VMEM((blk, 1), jnp.float32),      # l (row denom)
+            pltpu.VMEM((blk, d), jnp.float32),      # acc (value accum)
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(pos_q.astype(jnp.int32), pos_k.astype(jnp.int32), sum_q_i, sum_k_i,
+      valid_i, alibi_f, q, k, v, qn, kn, v0_)
+    return out
+
+
+__all__ = ["windowed_attention_bhsd"]

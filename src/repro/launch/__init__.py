@@ -1,0 +1,8 @@
+"""repro.launch — meshes, cell builders, dry-run + training entry points.
+
+NOTE: repro.launch.dryrun must be imported/run as the process entry point
+(it sets XLA_FLAGS for 512 placeholder devices before jax loads); nothing
+here imports it.
+"""
+from repro.launch.mesh import make_cpu_mesh, make_production_mesh
+from repro.launch.steps import Cell, build_cell

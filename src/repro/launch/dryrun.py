@@ -1,0 +1,139 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be the process entry point (``python -m repro.launch.dryrun``): the
+XLA_FLAGS line above runs before any jax import so jax.make_mesh can build
+the 512-placeholder-device production meshes on the one real CPU.
+
+For every cell this prints/records:
+  * memory_analysis()  — per-device argument/output/temp bytes (proves fit)
+  * cost_analysis()    — per-device HLO FLOPs + bytes accessed
+  * collective bytes   — parsed from the post-SPMD HLO (repro.launch.hlo)
+  * roofline terms     — compute / memory / collective seconds (v5e consts)
+
+Artifacts land in benchmarks/artifacts/dryrun/<mesh>/<arch>__<shape>.json;
+EXPERIMENTS.md §Dry-run and §Roofline are generated from them.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED, all_cells, get_arch
+from repro.launch.hlo import analyze_hlo, collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import roofline_terms
+from repro.launch.steps import build_cell
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "benchmarks", "artifacts", "dryrun")
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool,
+             overrides=None, verbose: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    t0 = time.time()
+    cell = build_cell(arch, shape, mesh, overrides=overrides)
+    lowered = jax.jit(cell.step_fn, donate_argnums=cell.donate
+                      ).lower(*cell.args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    # trip-count-aware accounting (repro.launch.hlo.analyze_hlo): XLA's own
+    # cost_analysis visits while bodies once, undercounting scanned
+    # layers/microbatches by their trip counts
+    an = analyze_hlo(hlo, n_devices=n_dev)
+
+    rec = {
+        "arch": arch, "shape": shape, "kind": cell.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16", "n_devices": n_dev,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "per_device": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes_est": (mem.argument_size_in_bytes
+                               + mem.output_size_in_bytes
+                               + mem.temp_size_in_bytes
+                               - mem.alias_size_in_bytes),
+            "hlo_flops": an["flops"],
+            "hlo_bytes_accessed": an["bytes"],
+            "collective_bytes": an["collective_bytes"],
+            "xla_cost_flops_once": cost.get("flops", 0.0),
+            "xla_cost_bytes_once": cost.get("bytes accessed", 0.0),
+        },
+        "collectives": {k: float(an[k]) for k in
+                        ("all-gather", "all-reduce", "reduce-scatter",
+                         "all-to-all", "collective-permute")},
+        "meta": cell.meta,
+    }
+    rec["roofline"] = roofline_terms(rec)
+    if verbose:
+        pd = rec["per_device"]
+        r = rec["roofline"]
+        print(f"[{rec['mesh']}] {arch} x {shape} ({cell.kind}): "
+              f"compile {t_compile:.1f}s | "
+              f"mem {pd['peak_bytes_est']/2**30:.2f} GiB/dev | "
+              f"flops {pd['hlo_flops']:.3e} | coll {pd['collective_bytes']/2**20:.1f} MiB | "
+              f"terms c/m/x = {r['compute_s']:.2e}/{r['memory_s']:.2e}/"
+              f"{r['collective_s']:.2e} s -> {r['bottleneck']}",
+              flush=True)
+    return rec
+
+
+def save_record(rec: dict):
+    d = os.path.join(ARTIFACT_DIR, rec["mesh"])
+    os.makedirs(d, exist_ok=True)
+    path = os.path.join(d, f"{rec['arch']}__{rec['shape']}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--include-dti-llama", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ASSIGNED)
+    if args.include_dti_llama:
+        archs.append("dti-llama")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for multi_pod in meshes:
+        for arch in archs:
+            spec = get_arch(arch)
+            shapes = [args.shape] if args.shape else list(spec.shapes)
+            for shape in shapes:
+                try:
+                    rec = run_cell(arch, shape, multi_pod=multi_pod)
+                    save_record(rec)
+                except Exception as e:  # noqa: BLE001 — report, keep going
+                    failures.append((arch, shape, multi_pod, repr(e)))
+                    print(f"FAIL [{multi_pod=}] {arch} x {shape}: {e}",
+                          flush=True)
+                    traceback.print_exc()
+    print(f"\ndry-run complete: {len(failures)} failures")
+    for f in failures:
+        print("  FAIL:", f)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Mesh builders for the production pods.
+
+Functions, not module-level constants: importing this module never touches
+jax device state. The dry-run entry point (repro.launch.dryrun) sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; everything else (tests, benches) sees the 1 real CPU device and uses
+``make_cpu_mesh``.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 single pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_cpu_mesh() -> Mesh:
+    """Degenerate (1, 1) mesh on the host device — lets every sharded code
+    path run unchanged in tests on one CPU."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+__all__ = ["make_production_mesh", "make_cpu_mesh"]

@@ -1,0 +1,53 @@
+"""Roofline term derivation (TPU v5e constants) from dry-run records.
+
+All three terms are per-device seconds (cost_analysis and the HLO both
+describe the post-SPMD per-device program, so no further division by chip
+count is needed):
+
+    compute_s    = hlo_flops_per_device      / PEAK_FLOPS      (197 TF bf16)
+    memory_s     = hlo_bytes_per_device      / HBM_BW          (819 GB/s)
+    collective_s = collective_bytes_per_dev  / ICI_BW          (~50 GB/s/link)
+
+``model_flops_ratio`` = MODEL_FLOPS / (hlo_flops x chips): how much of the
+compiled compute is "useful" model math (catches remat recompute, dispatch
+overhead, padding waste). MODEL_FLOPS comes from the analytic per-arch
+model (6*N*D-style, windowed-attention aware) recorded in the cell meta.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+
+def roofline_terms(rec: Dict) -> Dict:
+    pd = rec["per_device"]
+    compute_s = pd["hlo_flops"] / PEAK_FLOPS
+    memory_s = pd["hlo_bytes_accessed"] / HBM_BW
+    collective_s = pd["collective_bytes"] / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    step_s = max(compute_s, memory_s, collective_s)
+
+    model_flops = rec.get("meta", {}).get("model_flops", 0.0)
+    n_dev = rec.get("n_devices", 1)
+    hlo_global = pd["hlo_flops"] * n_dev
+    out = dict(terms)
+    out["bottleneck"] = bottleneck.replace("_s", "")
+    out["step_time_lb_s"] = step_s
+    out["model_flops"] = model_flops
+    out["model_flops_ratio"] = (model_flops / hlo_global
+                                if hlo_global else 0.0)
+    # fraction of the compute roofline actually achieved if the step runs at
+    # its bound: useful_flops / (chips * peak * step_time)
+    if step_s > 0 and n_dev:
+        out["roofline_fraction"] = model_flops / (n_dev * PEAK_FLOPS * step_s)
+    else:
+        out["roofline_fraction"] = 0.0
+    return out
+
+
+__all__ = ["roofline_terms", "PEAK_FLOPS", "HBM_BW", "ICI_BW"]

@@ -1,0 +1,3 @@
+"""repro.models — model zoo: decoder LMs (GQA/MLA/MoE), GNN, recsys."""
+from repro.models.transformer import (ModelConfig, count_params, forward,
+                                      init_params, lm_logits)

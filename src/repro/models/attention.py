@@ -1,0 +1,236 @@
+"""Attention projection modules: GQA (Llama/Qwen-style) and MLA (DeepSeek-style).
+
+These own the parameter layout + RoPE application and delegate score/value
+math to ``repro.core.windowed`` so every DTI semantic (window, SUM isolation,
+SUM-NoPE+ALiBi, hidden-state reset) lives in exactly one place.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.windowed import ResetConfig, attention
+from repro.models.layers import (Params, alibi_slopes, apply_rope, dense,
+                                 init_linear, init_rmsnorm, rmsnorm)
+
+
+@dataclasses.dataclass(frozen=True)
+class DTIAttnOpts:
+    """Per-call DTI context threaded through the transformer."""
+    is_sum: Optional[jax.Array] = None      # (B, S) bool
+    h0: Optional[jax.Array] = None          # (B, S, d) initial hidden states
+    reset: Optional[ResetConfig] = None
+    sum_alibi: bool = True                  # NoPE + ALiBi on SUM rows
+    sum_isolated: bool = True
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(rng, d_model: int, n_heads: int, n_kv_heads: int, head_dim: int,
+             *, qkv_bias: bool = False, dtype=jnp.float32, lora_rank: int = 0) -> Params:
+    kq, kk, kv, ko = jax.random.split(rng, 4)
+    return {
+        "q": init_linear(kq, d_model, n_heads * head_dim, bias=qkv_bias,
+                         dtype=dtype, lora_rank=lora_rank),
+        "k": init_linear(kk, d_model, n_kv_heads * head_dim, bias=qkv_bias,
+                         dtype=dtype, lora_rank=lora_rank),
+        "v": init_linear(kv, d_model, n_kv_heads * head_dim, bias=qkv_bias,
+                         dtype=dtype, lora_rank=lora_rank),
+        "o": init_linear(ko, n_heads * head_dim, d_model, dtype=dtype,
+                         lora_rank=lora_rank),
+    }
+
+
+def gqa_attention(p: Params, x: jax.Array, *, n_heads: int, n_kv_heads: int,
+                  head_dim: int, positions: jax.Array, window: int,
+                  rope_theta: float, impl: str, q_chunk: int = 4,
+                  dti: Optional[DTIAttnOpts] = None,
+                  cache: Optional[Dict[str, jax.Array]] = None,
+                  valid: Optional[jax.Array] = None,
+                  ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """x: (B, S, d). Returns (out, updated_cache)."""
+    b, s, _ = x.shape
+    q = dense(p["q"], x).reshape(b, s, n_heads, head_dim)
+    k = dense(p["k"], x).reshape(b, s, n_kv_heads, head_dim)
+    v = dense(p["v"], x).reshape(b, s, n_kv_heads, head_dim)
+
+    q_rot = apply_rope(q, positions, rope_theta)
+    k_rot = apply_rope(k, positions, rope_theta)
+
+    kw: Dict[str, Any] = {}
+    if dti is not None and dti.is_sum is not None:
+        kw["is_sum_q"] = dti.is_sum
+        kw["is_sum_k"] = dti.is_sum
+        kw["sum_isolated"] = dti.sum_isolated
+        if dti.sum_alibi:
+            kw["q_nope"], kw["k_nope"] = q, k
+            kw["alibi"] = alibi_slopes(n_heads)
+        if dti.reset is not None and dti.h0 is not None:
+            kw["v0"] = dense(p["v"], dti.h0).reshape(b, s, n_kv_heads, head_dim)
+            kw["reset"] = dti.reset
+
+    new_cache = None
+    if cache is not None:
+        k_rot, v, pos_k, valid_k, new_cache = _update_cache(cache, k_rot, v, positions)
+        if "k_nope" in kw:
+            raise NotImplementedError("DTI SUM rows are a training-time feature")
+        out = attention("dense", q_rot, k_rot, v, pos_q=positions, pos_k=pos_k,
+                        window=window, valid_k=valid_k, **kw)
+    else:
+        if impl == "blocked":
+            kw["q_chunk"] = q_chunk
+        out = attention(impl, q_rot, k_rot, v, pos_q=positions, pos_k=positions,
+                        window=window, valid_k=valid, **kw)
+
+    out = dense(p["o"], out.reshape(b, s, n_heads * head_dim))
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (Multi-head Latent Attention, arXiv:2405.04434)
+# ---------------------------------------------------------------------------
+
+def init_mla(rng, d_model: int, n_heads: int, *, q_lora_rank: int,
+             kv_lora_rank: int, qk_nope_dim: int, qk_rope_dim: int,
+             v_head_dim: int, dtype=jnp.float32, lora_rank: int = 0) -> Params:
+    ks = jax.random.split(rng, 8)
+    qk_head = qk_nope_dim + qk_rope_dim
+    p: Params = {
+        "kv_down": init_linear(ks[0], d_model, kv_lora_rank, dtype=dtype),
+        "kv_norm": init_rmsnorm(kv_lora_rank, dtype),
+        "kv_up": init_linear(ks[1], kv_lora_rank,
+                             n_heads * (qk_nope_dim + v_head_dim), dtype=dtype,
+                             lora_rank=lora_rank),
+        "k_rope": init_linear(ks[2], d_model, qk_rope_dim, dtype=dtype),
+        "o": init_linear(ks[3], n_heads * v_head_dim, d_model, dtype=dtype,
+                         lora_rank=lora_rank),
+    }
+    if q_lora_rank > 0:
+        p["q_down"] = init_linear(ks[4], d_model, q_lora_rank, dtype=dtype)
+        p["q_norm"] = init_rmsnorm(q_lora_rank, dtype)
+        p["q_up"] = init_linear(ks[5], q_lora_rank, n_heads * qk_head,
+                                dtype=dtype, lora_rank=lora_rank)
+    else:
+        p["q"] = init_linear(ks[6], d_model, n_heads * qk_head, dtype=dtype,
+                             lora_rank=lora_rank)
+    return p
+
+
+def _mla_qkv(p: Params, x: jax.Array, *, n_heads: int, qk_nope_dim: int,
+             qk_rope_dim: int, v_head_dim: int, positions: jax.Array,
+             rope_theta: float):
+    """Project x -> (q, k, v, q_nope_full, k_nope_full)."""
+    b, s, _ = x.shape
+    if "q_down" in p:
+        qc = rmsnorm(p["q_norm"], dense(p["q_down"], x))
+        q = dense(p["q_up"], qc)
+    else:
+        q = dense(p["q"], x)
+    q = q.reshape(b, s, n_heads, qk_nope_dim + qk_rope_dim)
+    q_nope, q_pe = q[..., :qk_nope_dim], q[..., qk_nope_dim:]
+    q_pe_rot = apply_rope(q_pe, positions, rope_theta)
+
+    c_kv = rmsnorm(p["kv_norm"], dense(p["kv_down"], x))       # (B,S,r_kv)
+    kv = dense(p["kv_up"], c_kv).reshape(b, s, n_heads, qk_nope_dim + v_head_dim)
+    k_nope, v = kv[..., :qk_nope_dim], kv[..., qk_nope_dim:]
+    k_pe = dense(p["k_rope"], x).reshape(b, s, 1, qk_rope_dim)  # shared head
+    k_pe_rot = apply_rope(k_pe, positions, rope_theta)
+    k_pe_rot = jnp.broadcast_to(k_pe_rot, (b, s, n_heads, qk_rope_dim))
+    k_pe_b = jnp.broadcast_to(k_pe, (b, s, n_heads, qk_rope_dim))
+
+    q_full = jnp.concatenate([q_nope, q_pe_rot], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_pe_rot], axis=-1)
+    # "NoPE" variants for DTI SUM rows: identity rotation on the rope slice.
+    q_nope_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k_nope_full = jnp.concatenate([k_nope, k_pe_b], axis=-1)
+    return q_full, k_full, v, q_nope_full, k_nope_full, c_kv
+
+
+def mla_attention(p: Params, x: jax.Array, *, n_heads: int, qk_nope_dim: int,
+                  qk_rope_dim: int, v_head_dim: int, positions: jax.Array,
+                  window: int, rope_theta: float, impl: str, q_chunk: int = 4,
+                  dti: Optional[DTIAttnOpts] = None,
+                  cache: Optional[Dict[str, jax.Array]] = None,
+                  valid: Optional[jax.Array] = None,
+                  ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    b, s, _ = x.shape
+    qk_head = qk_nope_dim + qk_rope_dim
+    q, k, v, q_np, k_np, _ = _mla_qkv(
+        p, x, n_heads=n_heads, qk_nope_dim=qk_nope_dim, qk_rope_dim=qk_rope_dim,
+        v_head_dim=v_head_dim, positions=positions, rope_theta=rope_theta)
+
+    kw: Dict[str, Any] = {"scale": qk_head ** -0.5}
+    if dti is not None and dti.is_sum is not None:
+        kw["is_sum_q"] = dti.is_sum
+        kw["is_sum_k"] = dti.is_sum
+        kw["sum_isolated"] = dti.sum_isolated
+        if dti.sum_alibi:
+            kw["q_nope"], kw["k_nope"] = q_np, k_np
+            kw["alibi"] = alibi_slopes(n_heads)
+        if dti.reset is not None and dti.h0 is not None:
+            _, _, v0, _, _, _ = _mla_qkv(
+                p, dti.h0, n_heads=n_heads, qk_nope_dim=qk_nope_dim,
+                qk_rope_dim=qk_rope_dim, v_head_dim=v_head_dim,
+                positions=positions, rope_theta=rope_theta)
+            kw["v0"] = v0
+            kw["reset"] = dti.reset
+
+    new_cache = None
+    if cache is not None:
+        k, v, pos_k, valid_k, new_cache = _update_cache(cache, k, v, positions)
+        out = attention("dense", q, k, v, pos_q=positions, pos_k=pos_k,
+                        window=window, valid_k=valid_k, **kw)
+    else:
+        if impl == "blocked":
+            kw["q_chunk"] = q_chunk
+        out = attention(impl, q, k, v, pos_q=positions, pos_k=positions,
+                        window=window, valid_k=valid, **kw)
+
+    out = dense(p["o"], out.reshape(b, s, n_heads * v_head_dim))
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# KV cache (full + windowed ring buffer)
+# ---------------------------------------------------------------------------
+
+def init_cache(batch: int, capacity: int, n_kv_heads: int, k_dim: int,
+               v_dim: int, *, ring: bool, dtype=jnp.bfloat16) -> Dict[str, jax.Array]:
+    """A decode cache. ``ring=True`` -> fixed window ring buffer whose size is
+    independent of the logical sequence length (what makes ``long_500k``
+    decode O(window) — a direct corollary of DTI's windowed attention)."""
+    return {
+        "k": jnp.zeros((batch, capacity, n_kv_heads, k_dim), dtype),
+        "v": jnp.zeros((batch, capacity, n_kv_heads, v_dim), dtype),
+        "pos": jnp.full((batch, capacity), -1, jnp.int32),
+        "cursor": jnp.zeros((batch,), jnp.int32),
+        "ring": jnp.asarray(ring),
+    }
+
+
+def _update_cache(cache, k_new, v_new, positions):
+    """Insert S_new entries; returns (k_all, v_all, pos_k, valid_k, new_cache).
+
+    Ring mode wraps the write cursor; full mode requires cursor+S <= capacity.
+    """
+    b, s_new = positions.shape
+    cap = cache["k"].shape[1]
+    idx = (cache["cursor"][:, None] + jnp.arange(s_new)[None, :])
+    idx = jnp.where(cache["ring"], idx % cap, idx)
+    bidx = jnp.arange(b)[:, None]
+    k = cache["k"].at[bidx, idx].set(k_new.astype(cache["k"].dtype))
+    v = cache["v"].at[bidx, idx].set(v_new.astype(cache["v"].dtype))
+    pos = cache["pos"].at[bidx, idx].set(positions)
+    new_cache = {"k": k, "v": v, "pos": pos,
+                 "cursor": cache["cursor"] + s_new, "ring": cache["ring"]}
+    valid = pos >= 0
+    return k, v, pos, valid, new_cache
+
+
+__all__ = ["DTIAttnOpts", "init_gqa", "gqa_attention", "init_mla",
+           "mla_attention", "init_cache"]

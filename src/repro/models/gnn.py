@@ -1,0 +1,121 @@
+"""GIN (arXiv:1810.00826) with segment_sum message passing.
+
+JAX sparse is BCOO-only, so message passing is built directly on the
+edge-index -> node scatter primitive: gather source features, segment_sum
+into destinations. Supports full-graph, sampled-minibatch (see
+``repro.data.sampler``), and batched small molecules (graph_ids readout).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, init_linear, init_mlp, dense, mlp
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str = "gin-tu"
+    n_layers: int = 5
+    d_hidden: int = 64
+    d_feat: int = 1433
+    n_classes: int = 7
+    aggregator: str = "sum"
+    learnable_eps: bool = True
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"   # "bfloat16" halves message/psum bytes
+    remat: bool = True          # rematerialize each layer in backward —
+    # full-graph cells keep (N, d) activations + (E, d) messages per layer;
+    # at ogb_products scale that is the difference between 18 GiB and 6 GiB.
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+
+def init_gin(rng, cfg: GNNConfig) -> Params:
+    ks = jax.random.split(rng, cfg.n_layers + 2)
+    d = cfg.d_hidden
+    p: Params = {"proj": init_linear(ks[0], cfg.d_feat, d, bias=True,
+                                     dtype=cfg.pdtype)}
+    for i in range(cfg.n_layers):
+        p[f"layer{i}"] = {
+            "mlp": init_mlp(ks[i + 1], [d, d, d], dtype=cfg.pdtype),
+            "eps": jnp.zeros((), cfg.pdtype),
+        }
+    p["head"] = init_linear(ks[-1], d, cfg.n_classes, bias=True,
+                            dtype=cfg.pdtype)
+    return p
+
+
+def gin_aggregate(h: jax.Array, edge_src: jax.Array, edge_dst: jax.Array,
+                  n_nodes: int, aggregator: str = "sum",
+                  edge_valid: Optional[jax.Array] = None) -> jax.Array:
+    """Message passing primitive: sum_{j in N(i)} h_j via gather+segment.
+
+    ``edge_valid`` masks padding edges (fixed-shape padded subgraphs point
+    their pad edges at node 0 — without the mask they would pollute it).
+    """
+    msgs = jnp.take(h, edge_src, axis=0)
+    if edge_valid is not None:
+        msgs = msgs * edge_valid[:, None].astype(msgs.dtype)
+    if aggregator == "sum":
+        return jax.ops.segment_sum(msgs, edge_dst, num_segments=n_nodes)
+    if aggregator == "max":
+        return jax.ops.segment_max(msgs, edge_dst, num_segments=n_nodes)
+    if aggregator == "mean":
+        s = jax.ops.segment_sum(msgs, edge_dst, num_segments=n_nodes)
+        deg = jax.ops.segment_sum(jnp.ones((edge_dst.shape[0], 1), h.dtype),
+                                  edge_dst, num_segments=n_nodes)
+        return s / jnp.maximum(deg, 1.0)
+    raise ValueError(aggregator)
+
+
+def gin_forward(p: Params, cfg: GNNConfig, x: jax.Array,
+                edge_src: jax.Array, edge_dst: jax.Array, *,
+                node_valid: Optional[jax.Array] = None,
+                edge_valid: Optional[jax.Array] = None) -> jax.Array:
+    """Node classification: x (N, d_feat) -> logits (N, n_classes)."""
+    n = x.shape[0]
+    h = jax.nn.relu(dense(p["proj"], x)).astype(jnp.dtype(cfg.compute_dtype))
+
+    def layer(lp, h):
+        agg = gin_aggregate(h, edge_src, edge_dst, n, cfg.aggregator,
+                            edge_valid)
+        eps = lp["eps"] if cfg.learnable_eps else 0.0
+        h = mlp(lp["mlp"], (1.0 + eps) * h + agg, final_act=True)
+        if node_valid is not None:
+            h = h * node_valid[:, None].astype(h.dtype)
+        return h
+
+    if cfg.remat:
+        layer = jax.checkpoint(layer)
+    for i in range(cfg.n_layers):
+        h = layer(p[f"layer{i}"], h)
+    return dense(p["head"], h)
+
+
+def gin_graph_forward(p: Params, cfg: GNNConfig, x: jax.Array,
+                      edge_src: jax.Array, edge_dst: jax.Array,
+                      graph_ids: jax.Array, n_graphs: int,
+                      edge_valid: Optional[jax.Array] = None) -> jax.Array:
+    """Graph classification (molecule shape): sum-readout per graph."""
+    n = x.shape[0]
+    h = jax.nn.relu(dense(p["proj"], x))
+    readout = jnp.zeros((n_graphs, cfg.d_hidden), h.dtype)
+    for i in range(cfg.n_layers):
+        lp = p[f"layer{i}"]
+        agg = gin_aggregate(h, edge_src, edge_dst, n, cfg.aggregator,
+                            edge_valid)
+        eps = lp["eps"] if cfg.learnable_eps else 0.0
+        h = mlp(lp["mlp"], (1.0 + eps) * h + agg, final_act=True)
+        readout = readout + jax.ops.segment_sum(h, graph_ids,
+                                                num_segments=n_graphs)
+    return dense(p["head"], readout)
+
+
+__all__ = ["GNNConfig", "init_gin", "gin_forward", "gin_graph_forward",
+           "gin_aggregate"]

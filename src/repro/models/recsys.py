@@ -1,0 +1,330 @@
+"""RecSys CTR models: MIND, xDeepFM, DIN, SASRec (assigned architectures).
+
+All four share: sparse embedding tables (the hot path — see
+``repro.sparse.embedding``), a feature-interaction op (the family signature),
+and a small MLP head producing one logit. Pointwise sigmoid-BCE training.
+
+DTI applicability (DESIGN.md §Arch-applicability): SASRec natively trains all
+positions in parallel (the k=m limit of DTI); DIN gets a multi-target train
+step (`din_forward_multi`) transplanting the paper's idea; MIND / xDeepFM are
+non-sequential, implemented without DTI.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (Params, dense, init_layernorm, init_linear,
+                                 init_mlp, layernorm, mlp, normal_init)
+from repro.sparse.embedding import (embedding_lookup, field_lookup,
+                                    init_field_tables, init_table)
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str = "recsys"
+    kind: str = "din"                     # mind | xdeepfm | din | sasrec
+    embed_dim: int = 18
+    n_items: int = 1_000_000
+    seq_len: int = 100
+    # xDeepFM
+    field_vocabs: Tuple[int, ...] = ()
+    cin_layers: Tuple[int, ...] = (200, 200, 200)
+    dnn_dims: Tuple[int, ...] = (400, 400)
+    # DIN
+    attn_mlp: Tuple[int, ...] = (80, 40)
+    head_mlp: Tuple[int, ...] = (200, 80)
+    # SASRec
+    n_blocks: int = 2
+    n_heads: int = 1
+    window: int = 0                       # 0 = full causal (DTI option: >0)
+    # MIND
+    n_interests: int = 4
+    capsule_iters: int = 3
+    param_dtype: str = "float32"
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+
+# ===========================================================================
+# xDeepFM (arXiv:1803.05170) — CIN + DNN + linear
+# ===========================================================================
+
+def init_xdeepfm(rng, cfg: RecsysConfig) -> Params:
+    ks = jax.random.split(rng, 6)
+    m, d = len(cfg.field_vocabs), cfg.embed_dim
+    p: Params = {
+        "tables": init_field_tables(ks[0], cfg.field_vocabs, d, dtype=cfg.pdtype),
+        "linear": init_field_tables(ks[1], cfg.field_vocabs, 1, dtype=cfg.pdtype),
+        "dnn": init_mlp(ks[2], [m * d, *cfg.dnn_dims, 1], dtype=cfg.pdtype),
+    }
+    h_prev = m
+    cin = {}
+    for i, h in enumerate(cfg.cin_layers):
+        cin[f"w{i}"] = normal_init(ks[3], (h, h_prev, m), (h_prev * m) ** -0.5,
+                                   cfg.pdtype)
+        h_prev = h
+    p["cin"] = cin
+    p["cin_out"] = init_linear(ks[4], sum(cfg.cin_layers), 1, bias=True,
+                               dtype=cfg.pdtype)
+    p["bias"] = jnp.zeros((), cfg.pdtype)
+    return p
+
+
+def xdeepfm_forward(p: Params, cfg: RecsysConfig, ids: jax.Array) -> jax.Array:
+    """ids (B, F) -> logit (B,). CIN = outer-product + per-layer compress."""
+    x0 = field_lookup(p["tables"], ids)                       # (B, m, D)
+    b, m, d = x0.shape
+
+    # linear term: one weight per (field, id)
+    lin = field_lookup(p["linear"], ids).sum(axis=(1, 2))     # (B,)
+
+    # CIN
+    xk = x0
+    pooled = []
+    for i in range(len(cfg.cin_layers)):
+        z = jnp.einsum("bhd,bmd->bhmd", xk, x0)               # (B,Hk,m,D)
+        xk = jnp.einsum("bhmd,ohm->bod", z, p["cin"][f"w{i}"])
+        pooled.append(xk.sum(axis=-1))                        # (B,Hi)
+    cin_logit = dense(p["cin_out"], jnp.concatenate(pooled, axis=-1))[:, 0]
+
+    dnn_logit = mlp(p["dnn"], x0.reshape(b, m * d))[:, 0]
+    return lin + cin_logit + dnn_logit + p["bias"]
+
+
+# ===========================================================================
+# DIN (arXiv:1706.06978) — target attention over user history
+# ===========================================================================
+
+def init_din(rng, cfg: RecsysConfig) -> Params:
+    ks = jax.random.split(rng, 4)
+    d = cfg.embed_dim
+    return {
+        "items": init_table(ks[0], cfg.n_items, d, dtype=cfg.pdtype),
+        "attn": init_mlp(ks[1], [4 * d, *cfg.attn_mlp, 1], dtype=cfg.pdtype),
+        "head": init_mlp(ks[2], [3 * d, *cfg.head_mlp, 1], dtype=cfg.pdtype),
+    }
+
+
+def _din_attend(p: Params, h: jax.Array, t: jax.Array,
+                valid: Optional[jax.Array]) -> jax.Array:
+    """h (B,L,D) history embeds, t (B,K,D) targets -> (B,K,D) pooled."""
+    b, l, d = h.shape
+    k = t.shape[1]
+    hh = jnp.broadcast_to(h[:, None], (b, k, l, d))
+    tt = jnp.broadcast_to(t[:, :, None], (b, k, l, d))
+    feats = jnp.concatenate([hh, tt, hh - tt, hh * tt], axis=-1)
+    w = mlp(p["attn"], feats, act=jax.nn.sigmoid)[..., 0]     # (B,K,L)
+    if valid is not None:
+        w = jnp.where(valid[:, None, :], w, 0.0)
+    return jnp.einsum("bkl,bld->bkd", w, h)                   # DIN: no softmax
+
+
+def din_forward(p: Params, cfg: RecsysConfig, hist: jax.Array,
+                target: jax.Array,
+                valid: Optional[jax.Array] = None) -> jax.Array:
+    """hist (B, L), target (B,) -> logit (B,)."""
+    return din_forward_multi(p, cfg, hist, target[:, None], valid)[:, 0]
+
+
+def din_forward_multi(p: Params, cfg: RecsysConfig, hist: jax.Array,
+                      targets: jax.Array,
+                      valid: Optional[jax.Array] = None) -> jax.Array:
+    """DTI-transplant: k targets share one history embedding pass.
+
+    hist (B, L), targets (B, K) -> logits (B, K). The history lookup +
+    embedding gather (the dominant cost at embed_dim*L >> K) is done once
+    instead of K times — the same redundancy-elimination the paper applies
+    to LLM context encoding.
+    """
+    h = embedding_lookup(p["items"], hist)                    # (B,L,D)
+    t = embedding_lookup(p["items"], targets)                 # (B,K,D)
+    user = _din_attend(p, h, t, valid)                        # (B,K,D)
+    x = jnp.concatenate([user, t, user * t], axis=-1)
+    return mlp(p["head"], x)[..., 0]
+
+
+# ===========================================================================
+# SASRec (arXiv:1808.09781) — causal self-attention sequence model
+# ===========================================================================
+
+def init_sasrec(rng, cfg: RecsysConfig) -> Params:
+    ks = jax.random.split(rng, 3 + 4 * cfg.n_blocks)
+    d = cfg.embed_dim
+    p: Params = {
+        "items": init_table(ks[0], cfg.n_items, d, dtype=cfg.pdtype),
+        "pos": init_table(ks[1], cfg.seq_len, d, scale=0.02, dtype=cfg.pdtype),
+        "ln_f": init_layernorm(d, cfg.pdtype),
+    }
+    for i in range(cfg.n_blocks):
+        k0, k1, k2, k3 = ks[3 + 4 * i: 7 + 4 * i]
+        p[f"blk{i}"] = {
+            "ln1": init_layernorm(d, cfg.pdtype),
+            "ln2": init_layernorm(d, cfg.pdtype),
+            "q": init_linear(k0, d, d, dtype=cfg.pdtype),
+            "k": init_linear(k1, d, d, dtype=cfg.pdtype),
+            "v": init_linear(k2, d, d, dtype=cfg.pdtype),
+            "ffn": init_mlp(k3, [d, d, d], dtype=cfg.pdtype),
+        }
+    return p
+
+
+def sasrec_encode(p: Params, cfg: RecsysConfig, hist: jax.Array,
+                  valid: Optional[jax.Array] = None) -> jax.Array:
+    """hist (B, L) -> hidden (B, L, D). Causal (optionally windowed) attn.
+
+    SASRec is the k=m limit of DTI: every position is a training target in
+    one parallel pass. ``cfg.window > 0`` aligns train/serve context length
+    exactly as the paper's windowed causal attention does.
+    """
+    b, l = hist.shape
+    d = cfg.embed_dim
+    h = embedding_lookup(p["items"], hist) + p["pos"][None, :l]
+    pos = jnp.arange(l)
+    causal = pos[:, None] >= pos[None, :]
+    if cfg.window > 0:
+        causal &= (pos[:, None] - pos[None, :]) <= cfg.window
+    mask = causal[None]
+    if valid is not None:
+        mask = mask & valid[:, None, :]
+    nh = cfg.n_heads
+    hd = d // nh
+    for i in range(cfg.n_blocks):
+        blk = p[f"blk{i}"]
+        x = layernorm(blk["ln1"], h)
+        q = dense(blk["q"], x).reshape(b, l, nh, hd)
+        k = dense(blk["k"], x).reshape(b, l, nh, hd)
+        v = dense(blk["v"], x).reshape(b, l, nh, hd)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (hd ** 0.5)
+        s = jnp.where(mask[:, None], s, -1e30)
+        a = jax.nn.softmax(s, axis=-1)
+        h = h + jnp.einsum("bhqk,bkhd->bqhd", a, v).reshape(b, l, d)
+        h = h + mlp(blk["ffn"], layernorm(blk["ln2"], h), final_act=False)
+    return layernorm(p["ln_f"], h)
+
+
+def sasrec_forward(p: Params, cfg: RecsysConfig, hist: jax.Array,
+                   target: jax.Array,
+                   valid: Optional[jax.Array] = None) -> jax.Array:
+    """Pointwise CTR logit: dot(last hidden state, target embedding)."""
+    h = sasrec_encode(p, cfg, hist, valid)[:, -1]             # (B,D)
+    t = embedding_lookup(p["items"], target)                  # (B,D)
+    return jnp.sum(h * t, axis=-1)
+
+
+def sasrec_forward_all(p: Params, cfg: RecsysConfig, hist: jax.Array,
+                       targets: jax.Array,
+                       valid: Optional[jax.Array] = None) -> jax.Array:
+    """All-position training (native DTI): targets (B, L) aligned next items."""
+    h = sasrec_encode(p, cfg, hist, valid)                    # (B,L,D)
+    t = embedding_lookup(p["items"], targets)
+    return jnp.sum(h * t, axis=-1)                            # (B,L)
+
+
+# ===========================================================================
+# MIND (arXiv:1904.08030) — multi-interest dynamic routing capsules
+# ===========================================================================
+
+def init_mind(rng, cfg: RecsysConfig) -> Params:
+    ks = jax.random.split(rng, 3)
+    d = cfg.embed_dim
+    return {
+        "items": init_table(ks[0], cfg.n_items, d, dtype=cfg.pdtype),
+        "s_matrix": normal_init(ks[1], (d, d), d ** -0.5, cfg.pdtype),
+        "head": init_mlp(ks[2], [2 * d, 64, 1], dtype=cfg.pdtype),
+    }
+
+
+def _squash(x: jax.Array, axis: int = -1) -> jax.Array:
+    n2 = jnp.sum(jnp.square(x), axis=axis, keepdims=True)
+    return (n2 / (1 + n2)) * x / jnp.sqrt(n2 + 1e-9)
+
+
+def mind_interests(p: Params, cfg: RecsysConfig, hist: jax.Array,
+                   valid: Optional[jax.Array] = None) -> jax.Array:
+    """B2I dynamic routing: hist (B, L) -> interests (B, K, D)."""
+    h = embedding_lookup(p["items"], hist)                    # (B,L,D)
+    u = h @ p["s_matrix"]                                     # shared bilinear
+    b_, l, d = u.shape
+    k = cfg.n_interests
+    # fixed (deterministic) logit init so routing is reproducible
+    blogit = jnp.zeros((b_, k, l), u.dtype)
+    interests = jnp.zeros((b_, k, d), u.dtype)
+    vmask = None if valid is None else valid[:, None, :]
+    for _ in range(cfg.capsule_iters):
+        w = jax.nn.softmax(blogit, axis=1)                    # over interests
+        if vmask is not None:
+            w = jnp.where(vmask, w, 0.0)
+        interests = _squash(jnp.einsum("bkl,bld->bkd", w, u))
+        blogit = blogit + jnp.einsum("bkd,bld->bkl", interests, u)
+    return interests
+
+
+def mind_forward(p: Params, cfg: RecsysConfig, hist: jax.Array,
+                 target: jax.Array,
+                 valid: Optional[jax.Array] = None) -> jax.Array:
+    """Label-aware max over interests -> MLP head -> logit (B,)."""
+    interests = mind_interests(p, cfg, hist, valid)           # (B,K,D)
+    t = embedding_lookup(p["items"], target)                  # (B,D)
+    score = jnp.einsum("bkd,bd->bk", interests, t)
+    att = jax.nn.softmax(score * 2.0, axis=-1)                # label-aware attn (pow~2)
+    user = jnp.einsum("bk,bkd->bd", att, interests)
+    x = jnp.concatenate([user, t], axis=-1)
+    return mlp(p["head"], x)[..., 0]
+
+
+def mind_retrieval(p: Params, cfg: RecsysConfig, hist: jax.Array,
+                   cand_ids: jax.Array,
+                   valid: Optional[jax.Array] = None) -> jax.Array:
+    """retrieval_cand shape: one user vs n_candidates via batched dot.
+
+    hist (1, L), cand_ids (C,) -> scores (C,). max over interests — no loop,
+    one (K, D) x (D, C) matmul against the gathered candidate block.
+    """
+    interests = mind_interests(p, cfg, hist, valid)[0]        # (K,D)
+    cand = embedding_lookup(p["items"], cand_ids)             # (C,D)
+    return jnp.max(interests @ cand.T, axis=0)                # (C,)
+
+
+# ---------------------------------------------------------------------------
+# dispatch helpers
+# ---------------------------------------------------------------------------
+
+INIT = {"mind": init_mind, "xdeepfm": init_xdeepfm, "din": init_din,
+        "sasrec": init_sasrec}
+
+
+def init_recsys(rng, cfg: RecsysConfig) -> Params:
+    return INIT[cfg.kind](rng, cfg)
+
+
+def recsys_logits(p: Params, cfg: RecsysConfig, batch: Dict[str, jax.Array]) -> jax.Array:
+    if cfg.kind == "xdeepfm":
+        return xdeepfm_forward(p, cfg, batch["ids"])
+    if cfg.kind == "din":
+        return din_forward(p, cfg, batch["hist"], batch["target"],
+                           batch.get("valid"))
+    if cfg.kind == "sasrec":
+        return sasrec_forward(p, cfg, batch["hist"], batch["target"],
+                              batch.get("valid"))
+    if cfg.kind == "mind":
+        return mind_forward(p, cfg, batch["hist"], batch["target"],
+                            batch.get("valid"))
+    raise ValueError(cfg.kind)
+
+
+def bce_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    z = logits.astype(jnp.float32)
+    y = labels.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+__all__ = ["RecsysConfig", "init_recsys", "recsys_logits", "bce_loss",
+           "xdeepfm_forward", "din_forward", "din_forward_multi",
+           "sasrec_forward", "sasrec_forward_all", "sasrec_encode",
+           "mind_forward", "mind_interests", "mind_retrieval"]

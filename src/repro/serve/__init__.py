@@ -1,0 +1,3 @@
+"""repro.serve — prefill/decode serving engine with windowed ring caches."""
+from repro.serve.cache import Cache, cache_shape, init_lm_cache, slot_indices
+from repro.serve.engine import CTRServer, make_decode_fn, make_prefill_fn

@@ -1,0 +1,65 @@
+"""Decode KV caches: full-length and ring-buffer (windowed), GQA and MLA.
+
+Layout: per-layer tensors are stacked on a leading L dim so the decode step
+can ``lax.scan`` over (layer params, layer cache) — HLO stays O(1) in depth.
+Slot bookkeeping (``pos``, ``cursor``) is shared across layers (every layer
+writes the same slots).
+
+* GQA cache: k/v per head — ``k (L, B, cap, Hk, dk)``, ``v (L, B, cap, Hk, dv)``.
+* MLA cache: the **latent** per token — ``ckv (L, B, cap, r_kv)``,
+  ``kpe (L, B, cap, d_rope)``. Caching the latent instead of expanded heads
+  is what makes deepseek-v2 decode storable (0.58 KB/token/layer instead of
+  ~82 KB); attention runs in absorbed form (see repro.serve.engine).
+
+Ring mode (``ring=True``): capacity is a constant independent of the logical
+position — the windowed causal attention the paper trains with guarantees no
+query ever needs a key older than ``window``, so ``long_500k`` decode is
+O(window) in both memory and FLOPs. ``ring`` is static (baked into the
+jitted step), not a traced value.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig
+
+Cache = Dict[str, Any]
+
+
+def init_lm_cache(cfg: ModelConfig, batch: int, capacity: int,
+                  *, dtype=jnp.bfloat16) -> Cache:
+    l = cfg.n_layers
+    if cfg.attn_type == "mla":
+        tensors = {
+            "ckv": jnp.zeros((l, batch, capacity, cfg.kv_lora_rank), dtype),
+            "kpe": jnp.zeros((l, batch, capacity, cfg.qk_rope_dim), dtype),
+        }
+    else:
+        hk, dk = cfg.n_kv_heads, cfg.hd
+        tensors = {
+            "k": jnp.zeros((l, batch, capacity, hk, dk), dtype),
+            "v": jnp.zeros((l, batch, capacity, hk, dk), dtype),
+        }
+    tensors["pos"] = jnp.full((batch, capacity), -1, jnp.int32)
+    tensors["cursor"] = jnp.zeros((batch,), jnp.int32)
+    return tensors
+
+
+def cache_shape(cfg: ModelConfig, batch: int, capacity: int,
+                *, dtype=jnp.bfloat16) -> Dict[str, tuple]:
+    """Shapes/dtypes without allocation (dry-run input specs)."""
+    import jax
+    return jax.eval_shape(lambda: init_lm_cache(cfg, batch, capacity,
+                                                dtype=dtype))
+
+
+def slot_indices(cache: Cache, s_new: int, *, ring: bool):
+    """Slots the next ``s_new`` tokens occupy: (B, s_new) int32."""
+    cap = cache["pos"].shape[1]
+    idx = cache["cursor"][:, None] + jnp.arange(s_new, dtype=jnp.int32)[None]
+    return idx % cap if ring else idx
+
+
+__all__ = ["Cache", "init_lm_cache", "cache_shape", "slot_indices"]

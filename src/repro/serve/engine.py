@@ -1,0 +1,306 @@
+"""Serving: prefill scoring + incremental decode with stacked-layer caches.
+
+Inference follows the paper (section 3.6): sliding-window prompts with one
+[SUM] readout at the end, scored by bi-dimensional softmax over yes/no. Two
+execution paths:
+
+* ``make_prefill_fn``   — full forward over the prompt (the paper's actual
+  inference procedure). SUM rows keep their training-time semantics
+  (NoPE + ALiBi, isolation) but **no hidden-state reset** — the reset is a
+  training-only regularizer that mimics inference, inference itself is
+  untouched.
+* ``make_decode_fn``    — one-token incremental step against a KV cache
+  (decode_32k / long_500k shapes). The cache stores **unroped** keys plus
+  their logical positions; RoPE is applied at read time, which lets a [SUM]
+  query score the same cache with NoPE+ALiBi while regular tokens see
+  standard RoPE — one cache serves both semantics. MLA runs in absorbed
+  form against the latent cache (q_nope folded through W_UK, values decoded
+  through W_UV after aggregation).
+
+``lax.scan`` over (stacked layer params, stacked cache layers) keeps the
+lowered HLO O(1) in depth for the 512-device dry-run compiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.losses import ctr_logits
+from repro.core.windowed import NEG_INF
+from repro.models.layers import alibi_slopes, apply_rope, dense, rmsnorm
+from repro.models.moe import moe_ffn
+from repro.models.transformer import ModelConfig, forward
+from repro.serve.cache import Cache, slot_indices
+
+Params = Dict[str, Any]
+
+
+# ===========================================================================
+# prefill
+# ===========================================================================
+
+def make_prefill_fn(cfg: ModelConfig, *, yes_id: int = 3, no_id: int = 4,
+                    window: Optional[int] = None) -> Callable:
+    """(params, batch) -> p_click (B, S); valid only at [SUM] positions."""
+
+    def prefill(params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        # inference-time DTI: SUM NoPE+ALiBi + isolation, no reset
+        icfg = dataclasses.replace(cfg, dti_reset=False)
+        out = forward(params, icfg, batch["tokens"],
+                      positions=batch["positions"], is_sum=batch["is_sum"],
+                      valid=batch["valid"], dti_enabled=True, window=window)
+        logits2 = ctr_logits(params, cfg, out["hidden"], yes_id, no_id)
+        p = jax.nn.softmax(logits2.astype(jnp.float32), axis=-1)[..., 0]
+        return jnp.where(batch["is_sum"], p, 0.0)
+
+    return prefill
+
+
+# ===========================================================================
+# decode
+# ===========================================================================
+
+def _rope_read(k: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """Rope cached (unroped) keys with their stored positions; slots with
+    pos < 0 are masked later, rope them at 0."""
+    return apply_rope(k, jnp.maximum(pos, 0), theta)
+
+
+def _decode_attend(scores_rope, scores_nope, alibi, d, mask, is_sum_q, v_agg):
+    """Shared score->prob->value logic. scores_* are (B, H, s, cap) fp32."""
+    if scores_nope is not None:
+        biased = scores_nope - alibi[None, :, None, None] * d
+        scores = jnp.where(is_sum_q[:, None, :, None], biased, scores_rope)
+    else:
+        scores = scores_rope
+    scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    any_ok = jnp.any(mask, axis=-1)[:, None, :, None]
+    return v_agg(jnp.where(any_ok, probs, 0.0))
+
+
+def _gqa_decode_layer(lp: Params, h, kc, vc, *, cfg: ModelConfig, slots,
+                      pos_buf, positions, is_sum, window, kind):
+    b, s, _ = h.shape
+    hq, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    n_rep = hq // hk
+    x = rmsnorm(lp["ln_attn"], h, cfg.norm_eps)
+    q = dense(lp["attn"]["q"], x).reshape(b, s, hq, hd)
+    k_new = dense(lp["attn"]["k"], x).reshape(b, s, hk, hd)
+    v_new = dense(lp["attn"]["v"], x).reshape(b, s, hk, hd)
+
+    bidx = jnp.arange(b)[:, None]
+    kc = kc.at[bidx, slots].set(k_new.astype(kc.dtype))      # unroped keys
+    vc = vc.at[bidx, slots].set(v_new.astype(vc.dtype))
+
+    q_rope = apply_rope(q, positions, cfg.rope_theta)
+    k_rope = _rope_read(kc, pos_buf, cfg.rope_theta)
+
+    def rep(t):  # (B, cap, Hk, D) -> (B, cap, Hq, D)
+        if n_rep == 1:
+            return t
+        bb, cap, _, dd = t.shape
+        return jnp.broadcast_to(t[:, :, :, None, :],
+                                (bb, cap, hk, n_rep, dd)).reshape(bb, cap, hq, dd)
+
+    scale = hd ** -0.5
+    sc_rope = jnp.einsum("bshd,bkhd->bhsk", q_rope, rep(k_rope),
+                         preferred_element_type=jnp.float32) * scale
+    sc_nope = None
+    if cfg.dti_sum_alibi:
+        sc_nope = jnp.einsum("bshd,bkhd->bhsk", q, rep(kc),
+                             preferred_element_type=jnp.float32) * scale
+
+    d = (positions[:, None, :, None] - pos_buf[:, None, None, :]
+         ).astype(jnp.float32)
+    mask = ((pos_buf[:, None, :] >= 0)
+            & (positions[:, :, None] >= pos_buf[:, None, :])
+            & ((positions[:, :, None] - pos_buf[:, None, :]) <= window))
+    out = _decode_attend(sc_rope, sc_nope, alibi_slopes(hq), d, mask, is_sum,
+                         lambda p: jnp.einsum("bhsk,bkhd->bshd",
+                                              p.astype(h.dtype), rep(vc)))
+    h = h + dense(lp["attn"]["o"], out.reshape(b, s, hq * hd))
+    h, aux = _ffn(lp, h, cfg, kind)
+    return h, kc, vc, aux
+
+
+def _mla_decode_layer(lp: Params, h, ckv_c, kpe_c, *, cfg: ModelConfig,
+                      slots, pos_buf, positions, is_sum, window, kind):
+    """Absorbed-MLA decode: scores and values against the latent cache."""
+    b, s, _ = h.shape
+    hq = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ap = lp["attn"]
+    x = rmsnorm(lp["ln_attn"], h, cfg.norm_eps)
+
+    if "q_down" in ap:
+        qc = rmsnorm(ap["q_norm"], dense(ap["q_down"], x))
+        q = dense(ap["q_up"], qc)
+    else:
+        q = dense(ap["q"], x)
+    q = q.reshape(b, s, hq, dn + dr)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    q_pe_rope = apply_rope(q_pe, positions, cfg.rope_theta)
+
+    c_new = rmsnorm(ap["kv_norm"], dense(ap["kv_down"], x))         # (B,s,r)
+    kpe_new = dense(ap["k_rope"], x)                                # (B,s,dr)
+
+    bidx = jnp.arange(b)[:, None]
+    ckv_c = ckv_c.at[bidx, slots].set(c_new.astype(ckv_c.dtype))
+    kpe_c = kpe_c.at[bidx, slots].set(kpe_new.astype(kpe_c.dtype))
+
+    # absorb W_UK into the query, W_UV into the output
+    w_up = ap["kv_up"]["w"].reshape(cfg.kv_lora_rank, hq, dn + dv)
+    w_uk, w_uv = w_up[..., :dn], w_up[..., dn:]
+    q_abs = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)              # (B,s,H,r)
+
+    kpe_rope = _rope_read(kpe_c[:, :, None, :], pos_buf,
+                          cfg.rope_theta)[:, :, 0, :]               # (B,cap,dr)
+    scale = (dn + dr) ** -0.5
+    sc_rope = (jnp.einsum("bshr,bkr->bhsk", q_abs, ckv_c,
+                          preferred_element_type=jnp.float32)
+               + jnp.einsum("bshd,bkd->bhsk", q_pe_rope, kpe_rope,
+                            preferred_element_type=jnp.float32)) * scale
+    sc_nope = None
+    if cfg.dti_sum_alibi:
+        sc_nope = (jnp.einsum("bshr,bkr->bhsk", q_abs, ckv_c,
+                              preferred_element_type=jnp.float32)
+                   + jnp.einsum("bshd,bkd->bhsk", q_pe, kpe_c,
+                                preferred_element_type=jnp.float32)) * scale
+
+    d = (positions[:, None, :, None] - pos_buf[:, None, None, :]
+         ).astype(jnp.float32)
+    mask = ((pos_buf[:, None, :] >= 0)
+            & (positions[:, :, None] >= pos_buf[:, None, :])
+            & ((positions[:, :, None] - pos_buf[:, None, :]) <= window))
+
+    def v_agg(p):
+        o_lat = jnp.einsum("bhsk,bkr->bshr", p.astype(h.dtype), ckv_c)
+        return jnp.einsum("bshr,rhd->bshd", o_lat, w_uv)
+
+    out = _decode_attend(sc_rope, sc_nope, alibi_slopes(hq), d, mask, is_sum,
+                         v_agg)
+    h = h + dense(ap["o"], out.reshape(b, s, hq * dv))
+    h, aux = _ffn(lp, h, cfg, kind)
+    return h, ckv_c, kpe_c, aux
+
+
+def _ffn(lp: Params, h, cfg: ModelConfig, kind: str):
+    from repro.models.layers import swiglu
+    x = rmsnorm(lp["ln_ffn"], h, cfg.norm_eps)
+    if kind == "moe":
+        f, aux = moe_ffn(lp["ffn"], x, n_experts=cfg.n_experts,
+                         top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+                         norm_topk=cfg.norm_topk)
+    else:
+        f, aux = swiglu(lp["ffn"], x), jnp.zeros((), jnp.float32)
+    return h + f, aux
+
+
+def make_decode_fn(cfg: ModelConfig, *, window: int, ring: bool,
+                   yes_id: int = 3, no_id: int = 4) -> Callable:
+    """(params, cache, tokens (B,s), positions (B,s), is_sum (B,s))
+    -> (p_click (B, s), new_cache)."""
+    mla = cfg.attn_type == "mla"
+    keys = ("ckv", "kpe") if mla else ("k", "v")
+    layer_fn = _mla_decode_layer if mla else _gqa_decode_layer
+
+    def decode(params: Params, cache: Cache, tokens: jax.Array,
+               positions: jax.Array, is_sum: jax.Array
+               ) -> Tuple[jax.Array, Cache]:
+        b, s = tokens.shape
+        slots = slot_indices(cache, s, ring=ring)
+        bidx = jnp.arange(b)[:, None]
+        pos_buf = cache["pos"].at[bidx, slots].set(positions)
+        new_cache = dict(cache, pos=pos_buf,
+                         cursor=cache["cursor"] + s)
+
+        h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.cdtype)
+
+        n_prefix = cfg.first_dense_layers if cfg.moe else 0
+
+        # The (L, B, cap, ...) cache tensors ride the scan CARRY and are
+        # updated per layer with dynamic_update_index_in_dim: XLA keeps
+        # while-loop carries in place, so the donated cache is mutated with
+        # no xs/ys double buffer (which would cost a full extra cache).
+        def run_group(h, ca_all, cb_all, group: Params, kind: str, lo: int):
+            n = jax.tree_util.tree_leaves(group)[0].shape[0]
+
+            def body(carry, xs):
+                hc, ca_full, cb_full = carry
+                lp, li = xs
+                ca = jax.lax.dynamic_index_in_dim(ca_full, li, 0,
+                                                  keepdims=False)
+                cb = jax.lax.dynamic_index_in_dim(cb_full, li, 0,
+                                                  keepdims=False)
+                hh, ca, cb, aux = layer_fn(
+                    lp, hc, ca, cb, cfg=cfg, slots=slots, pos_buf=pos_buf,
+                    positions=positions, is_sum=is_sum, window=window,
+                    kind=kind)
+                ca_full = jax.lax.dynamic_update_index_in_dim(
+                    ca_full, ca.astype(ca_full.dtype), li, 0)
+                cb_full = jax.lax.dynamic_update_index_in_dim(
+                    cb_full, cb.astype(cb_full.dtype), li, 0)
+                return (hh, ca_full, cb_full), None
+
+            idx = lo + jnp.arange(n, dtype=jnp.int32)
+            (h, ca_all, cb_all), _ = jax.lax.scan(
+                body, (h, ca_all, cb_all), (group, idx))
+            return h, ca_all, cb_all
+
+        ca_all, cb_all = cache[keys[0]], cache[keys[1]]
+        if "prefix" in params:
+            h, ca_all, cb_all = run_group(h, ca_all, cb_all,
+                                          params["prefix"], "dense", 0)
+        h, ca_all, cb_all = run_group(h, ca_all, cb_all, params["stack"],
+                                      "moe" if cfg.moe else "dense",
+                                      n_prefix)
+        new_cache[keys[0]], new_cache[keys[1]] = ca_all, cb_all
+
+        h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+        logits2 = ctr_logits(params, cfg, h, yes_id, no_id)
+        p = jax.nn.softmax(logits2.astype(jnp.float32), axis=-1)[..., 0]
+        return p, new_cache
+
+    return decode
+
+
+# ===========================================================================
+# batched CTR scoring server (example-facing)
+# ===========================================================================
+
+@dataclasses.dataclass
+class CTRServer:
+    """Batched pointwise CTR scorer over sliding-window prompts.
+
+    Pads requests to a fixed (batch, seq) grid, scores the [SUM] position of
+    each, returns p(click). One jitted prefill per (batch, seq) bucket.
+    """
+    params: Params
+    cfg: ModelConfig
+    max_len: int
+    yes_id: int = 3
+    no_id: int = 4
+
+    def __post_init__(self):
+        self._prefill = jax.jit(make_prefill_fn(
+            self.cfg, yes_id=self.yes_id, no_id=self.no_id))
+
+    def score(self, prompts) -> "list[float]":
+        import numpy as np
+        b = len(prompts)
+        batch = {k: np.stack([p[k] for p in prompts])
+                 for k in ("tokens", "positions", "is_sum", "valid")}
+        p = np.asarray(self._prefill(self.params, batch))
+        out = []
+        for i in range(b):
+            sums = np.flatnonzero(batch["is_sum"][i])
+            out.append(float(p[i, sums[-1]]) if len(sums) else 0.5)
+        return out
+
+
+__all__ = ["make_prefill_fn", "make_decode_fn", "CTRServer"]

@@ -1,0 +1,4 @@
+"""repro.sharding — GSPMD partition rules per model family."""
+from repro.sharding.partition import (batch_spec, data_axis, dp_size,
+                                      leaf_path_str, make_param_specs,
+                                      rules_for, spec_for_shape, zero1_specs)

@@ -1,0 +1,89 @@
+"""Activation sharding policy: trace-time ambient mesh + token pinning.
+
+GSPMD left alone propagates *weight* shardings into the residual stream —
+with TP rules the hidden state ends up feature-sharded and every layer pays
+full-width activation all-gathers/all-reduces; with FSDP rules it ends up
+token-UNsharded (8 GiB fp32 intermediates at 1M tokens). Pinning the layer
+boundary to token-sharded (batch over the data axis, features replicated)
+is the Megatron/MaxText discipline; XLA then moves the *weights* (small,
+per-layer, loop-hoistable) instead of the activations.
+
+``activation_mesh(mesh)`` is a trace-time context: cell builders wrap their
+step fns so the constraint applies no matter where jit traces them. When no
+mesh is active (unit tests, CPU training) ``constrain_tokens`` is identity.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.sharding.partition import spec_for_shape
+
+_STATE = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh: Optional[Mesh], batch_axis="data",
+                    tensor_axis: Optional[str] = None):
+    prev = (current_mesh(), getattr(_STATE, "batch_axis", "data"),
+            getattr(_STATE, "tensor_axis", None))
+    _STATE.mesh = mesh
+    _STATE.batch_axis = batch_axis
+    _STATE.tensor_axis = tensor_axis
+    try:
+        yield
+    finally:
+        _STATE.mesh, _STATE.batch_axis, _STATE.tensor_axis = prev
+
+
+def constrain_tokens(x: jax.Array, kind: str = "boundary") -> jax.Array:
+    """Pin activations to the profile's layout; identity when no activation
+    mesh is active or an axis does not divide.
+
+    kinds (Megatron discipline — batch over data everywhere):
+      boundary  (B, S, d)     features replicated (post-all-reduce state)
+      heads     (B, S, H, hd) H over "model" under TP, replicated under DP
+      ffn       (B, S, f)     f over "model" under TP, replicated under DP
+
+    Without these pins GSPMD materialises *global* activations for weight-
+    gradient contractions (a 22.5 GiB all-gather of (256, 4096, 5760) fp32
+    in the minicpm-2b/dp cell) or feature-reshards the residual stream
+    (§Perf log)."""
+    mesh = current_mesh()
+    if mesh is None or not hasattr(x, "ndim") or x.ndim < 2:
+        return x
+    batch = getattr(_STATE, "batch_axis", "data")
+    tp = getattr(_STATE, "tensor_axis", None)
+    if kind == "heads" and tp is not None and x.ndim >= 3:
+        axes = (batch,) + (None,) * (x.ndim - 3) + (tp, None)
+    elif kind == "ffn" and tp is not None:
+        axes = (batch,) + (None,) * (x.ndim - 2) + (tp,)
+    else:
+        axes = (batch,) + (None,) * (x.ndim - 1)
+    spec = spec_for_shape(x.shape, axes, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def with_activation_mesh(fn, mesh: Optional[Mesh], batch_axis="data",
+                         tensor_axis: Optional[str] = None):
+    """Wrap a step fn so the policy is active while it traces."""
+    if mesh is None:
+        return fn
+
+    def wrapped(*args, **kwargs):
+        with activation_mesh(mesh, batch_axis, tensor_axis):
+            return fn(*args, **kwargs)
+
+    return wrapped
+
+
+__all__ = ["activation_mesh", "constrain_tokens", "current_mesh",
+           "with_activation_mesh"]

@@ -1,0 +1,247 @@
+"""Leaf-path -> PartitionSpec rules (GSPMD layout policy per model family).
+
+The resolver walks a params (or optimizer-state) pytree, matches each leaf's
+path against ordered regex rules, and emits a NamedSharding. Two safety
+passes make the rules robust across all 10 assigned archs:
+
+* **divisibility** — an axis entry is kept only if the corresponding dim is
+  divisible by the mesh axis size (vocab 122753 is odd, DIN's embed_dim is
+  18, minicpm has 36 heads ... rules stay generic, the resolver drops what
+  does not fit instead of failing the compile).
+* **zero1** — optionally re-shards optimizer-state leaves over the data axis
+  on their largest still-unsharded dim (ZeRO-1: optimizer memory scales with
+  1/(dp*tp) while params keep their TP-only layout).
+
+Rules use axis aliases resolved against the actual mesh:
+  "data"  -> ("pod", "data") on the multi-pod mesh, "data" on single-pod
+  "model" -> "model"
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisEntry = Union[None, str, Tuple[str, ...]]
+Rule = Tuple[str, Tuple[AxisEntry, ...]]
+
+
+def leaf_path_str(path) -> str:
+    """KeyPath -> 'stack/attn/q/w' style string."""
+    parts = []
+    for p in path:
+        s = str(p)
+        s = re.sub(r"[\[\]'\.]", "", s)
+        parts.append(s)
+    return "/".join(parts)
+
+
+def _resolve_axis(axis: AxisEntry, mesh: Mesh) -> AxisEntry:
+    """Map alias axes onto the actual mesh ('data' spans pod+data if present)."""
+    if axis is None:
+        return None
+    if isinstance(axis, tuple):
+        flat: list = []
+        for a in axis:
+            r = _resolve_axis(a, mesh)
+            if isinstance(r, tuple):
+                flat.extend(x for x in r if x not in flat)
+            elif r is not None and r not in flat:
+                flat.append(r)
+        return tuple(flat) if flat else None
+    if axis == "data" and "pod" in mesh.axis_names:
+        return ("pod", "data")
+    return axis if axis in mesh.axis_names else None
+
+
+def _axis_size(axis: AxisEntry, mesh: Mesh) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def spec_for_shape(shape: Sequence[int], template: Tuple[AxisEntry, ...],
+                   mesh: Mesh) -> P:
+    """Right-align the template onto the shape (scan stacking prepends a
+    layer dim) and drop entries whose dim is not divisible."""
+    n = len(shape)
+    tpl: List[AxisEntry] = list(template)
+    if len(tpl) < n:                       # leading (layer) dims unsharded
+        tpl = [None] * (n - len(tpl)) + tpl
+    elif len(tpl) > n:
+        tpl = tpl[len(tpl) - n:]
+    out: List[AxisEntry] = []
+    for dim, axis in zip(shape, tpl):
+        axis = _resolve_axis(axis, mesh)
+        if axis is not None and dim % _axis_size(axis, mesh) != 0:
+            axis = None
+        out.append(axis)
+    return P(*out)
+
+
+def make_param_specs(params_shape: Any, rules: List[Rule], mesh: Mesh,
+                     *, default: Tuple[AxisEntry, ...] = ()) -> Any:
+    """Pytree of ShapeDtypeStruct/arrays -> pytree of NamedSharding."""
+    compiled = [(re.compile(pat), tpl) for pat, tpl in rules]
+
+    def one(path, leaf):
+        key = leaf_path_str(path)
+        shape = getattr(leaf, "shape", ())
+        if not shape:
+            return NamedSharding(mesh, P())
+        for pat, tpl in compiled:
+            if pat.search(key):
+                return NamedSharding(mesh, spec_for_shape(shape, tpl, mesh))
+        return NamedSharding(mesh, spec_for_shape(shape, default, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def zero1_specs(params_shape: Any, param_specs: Any, mesh: Mesh,
+                *, axis: Union[str, Tuple[str, ...]] = "data") -> Any:
+    """Optimizer-state layout: param spec + the given axis on the largest
+    unsharded dim (divisibility permitting). The AdamW mu/nu/master trees
+    mirror the param tree, so the same specs apply leaf-for-leaf. Pass
+    ``axis=("data", "model")`` (pure-DP profiles) to shard optimizer state
+    over the whole mesh."""
+    dp = _resolve_axis(axis, mesh)
+    size = _axis_size(dp, mesh)
+
+    def used(entry) -> bool:
+        ax = entry if isinstance(entry, tuple) else (entry,)
+        dps = dp if isinstance(dp, tuple) else (dp,)
+        return any(a in dps for a in ax if a is not None)
+
+    def one(leaf, ns):
+        shape = getattr(leaf, "shape", ())
+        spec = list(ns.spec) + [None] * (len(shape) - len(ns.spec))
+        if any(used(e) for e in spec if e is not None):
+            return ns                      # FSDP profile already uses data
+        best, best_dim = -1, 0
+        for i, (dim, ax) in enumerate(zip(shape, spec)):
+            if ax is None and dim % size == 0 and dim > best_dim:
+                best, best_dim = i, dim
+        if best >= 0:
+            spec[best] = dp
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(one, params_shape, param_specs)
+
+
+def batch_spec(mesh: Mesh, *entries: AxisEntry) -> NamedSharding:
+    return NamedSharding(mesh, P(*[_resolve_axis(e, mesh) for e in entries]))
+
+
+def data_axis(mesh: Mesh) -> AxisEntry:
+    return _resolve_axis("data", mesh)
+
+
+def dp_size(mesh: Mesh) -> int:
+    return _axis_size(_resolve_axis("data", mesh), mesh)
+
+
+# ===========================================================================
+# Per-family rule tables
+# ===========================================================================
+
+# Dense / GQA / MLA decoder, TP-only (params replicated over data).
+LM_TP_RULES: List[Rule] = [
+    (r"embed$",                 (None, "model")),       # (V, d): d sharded
+    (r"lm_head/w$",             ("model", None)),       # (d, V): row-parallel
+    (r"attn/(q|k|v)(_up)?/w$",  (None, "model")),       # col-parallel heads
+    (r"attn/(q|k|v)/b$",        ("model",)),
+    (r"attn/o/w$",              ("model", None)),       # row-parallel
+    (r"attn/(q|kv)_down/w$",    (None, None)),          # small latents: repl.
+    (r"attn/kv_up/w$",          (None, "model")),
+    (r"attn/k_rope/w$",         (None, None)),
+    (r"ffn/(gate|up)/w$",       (None, "model")),
+    (r"ffn/down/w$",            ("model", None)),
+    (r"shared/(gate|up)/w$",    (None, "model")),
+    (r"shared/down/w$",         ("model", None)),
+    (r"w_gate$|w_up$",          (None, None, "model")), # experts (E, d, f)
+    (r"w_down$",                (None, "model", None)), # (E, f, d)
+    (r"router/w$",              (None, None)),
+    (r"lora_a$",                (None, None)),
+    (r"lora_b$",                (None, "model")),
+]
+
+# FSDP+TP 2D for big models (deepseek-v2): the second large dim of every
+# weight shards over "data" — GSPMD resolves the token-vs-weight axis clash
+# by feature-resharding activations, which is acceptable as long as the
+# token count per pass is bounded (train microbatches 16-way; prefill
+# chunks its batch — see _lm_prefill_cell). An alternative expert-only 2D
+# layout (experts/model + d_ff/data, dense TP-only) was measured WORSE: the
+# unsharded expert capacity dim replicated expert FLOPs ~80x (hypothesis
+# log, EXPERIMENTS.md §Perf).
+LM_FSDP_TP_RULES: List[Rule] = [
+    (r"embed$",                 ("data", "model")),
+    (r"lm_head/w$",             ("model", "data")),
+    (r"attn/(q|k|v)(_up)?/w$",  ("data", "model")),
+    (r"attn/(q|k|v)/b$",        ("model",)),
+    (r"attn/o/w$",              ("model", "data")),
+    (r"attn/(q|kv)_down/w$",    ("data", None)),
+    (r"attn/kv_up/w$",          (None, "model")),
+    (r"attn/k_rope/w$",         ("data", None)),
+    (r"ffn/(gate|up)/w$",       ("data", "model")),
+    (r"ffn/down/w$",            ("model", "data")),
+    (r"shared/(gate|up)/w$",    ("data", "model")),
+    (r"shared/down/w$",         ("model", "data")),
+    (r"w_gate$|w_up$",          ("model", "data", None)),  # (E, d, f): EP+d/dp
+    (r"w_down$",                ("model", None, "data")),  # (E, f, d)
+    (r"router/w$",              (None, None)),
+    (r"lora_a$",                ("data", None)),
+    (r"lora_b$",                (None, "model")),
+]
+
+# RecSys: tables column-sharded over model when dim divides, else row-sharded.
+RECSYS_RULES: List[Rule] = [
+    (r"tables/|linear/",        ("model", None)),   # per-field tables: rows
+    (r"items$",                 ("model", None)),   # item table: row-sharded
+    (r"pos$",                   (None, None)),
+    (r"(dnn|head|attn|ffn|cin_out|fc\d)/.*w$", (None, "model")),
+    (r"cin/",                   (None, None, None)),
+    (r"s_matrix$",              (None, "model")),
+]
+
+# GNN: small model, replicate params (edges carry the parallelism).
+GNN_RULES: List[Rule] = []
+
+
+# Pure data parallelism: params replicated everywhere (grads sync once per
+# step), optimizer state ZeRO-1-sharded over the WHOLE mesh. For <=4B-param
+# dense models at 1M-token batches this beats TP by >10x on collective
+# bytes (hillclimb log, EXPERIMENTS.md §Perf): TP pays 4 activation
+# all-reduces per layer per microbatch, DP pays one 2x|params| all-reduce
+# per step.
+LM_DP_RULES: List[Rule] = []
+
+
+# Variant: dense layers TP-only, routed experts 2D (E over model, d_ff over
+# data). Hurts prefill (expert capacity replication) but relieves the dense
+# activation-resharding storm in training — measured per cell in §Perf.
+LM_EP_TP_RULES: List[Rule] = [r for r in LM_TP_RULES
+                              if not r[0].startswith(r"w_")] + [
+    (r"w_gate$|w_up$",          ("model", None, "data")),
+    (r"w_down$",                ("model", "data", None)),
+]
+
+
+def rules_for(family: str, profile: str = "tp") -> List[Rule]:
+    if family == "lm":
+        return {"tp": LM_TP_RULES, "fsdp_tp": LM_FSDP_TP_RULES,
+                "dp": LM_DP_RULES, "ep_tp": LM_EP_TP_RULES}[profile]
+    if family == "recsys":
+        return RECSYS_RULES
+    if family == "gnn":
+        return GNN_RULES
+    raise ValueError(family)
+
+
+__all__ = ["make_param_specs", "zero1_specs", "batch_spec", "data_axis",
+           "dp_size", "spec_for_shape", "rules_for", "leaf_path_str",
+           "LM_TP_RULES", "LM_FSDP_TP_RULES", "RECSYS_RULES", "GNN_RULES"]

@@ -1,0 +1,97 @@
+"""Embedding substrate: JAX has no nn.EmbeddingBag / CSR — we build it.
+
+Lookup = ``jnp.take`` (row gather); reduction = masked sum / ``segment_sum``.
+Tables are column-sharded over the "model" mesh axis in the distributed
+setting (every device holds dim/TP of every row -> lookups are always local;
+see repro.sharding.partition). The Pallas kernel in
+``repro.kernels.embedding_bag`` implements the same op with explicit VMEM
+tiling for the TPU hot path; ``ref.py`` there aliases these functions.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import normal_init
+
+
+def init_table(rng, vocab: int, dim: int, *, scale: float = 0.01,
+               dtype=jnp.float32) -> jax.Array:
+    return normal_init(rng, (vocab, dim), scale, dtype)
+
+
+def embedding_lookup(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """Single-hot lookup: ids (...,) -> (..., dim)."""
+    return jnp.take(table, ids, axis=0)
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array,
+                  valid: Optional[jax.Array] = None, *,
+                  mode: str = "sum",
+                  weights: Optional[jax.Array] = None) -> jax.Array:
+    """Fixed-shape multi-hot bag: ids (..., H) -> (..., dim).
+
+    valid (..., H) masks padding slots. This is the dense-padded
+    EmbeddingBag — the layout TPUs want (no ragged gathers).
+    """
+    e = jnp.take(table, ids, axis=0)                       # (..., H, dim)
+    if weights is not None:
+        e = e * weights[..., None].astype(e.dtype)
+    if valid is not None:
+        e = e * valid[..., None].astype(e.dtype)
+    s = jnp.sum(e, axis=-2)
+    if mode == "sum":
+        return s
+    if mode == "mean":
+        n = (jnp.sum(valid, axis=-1, keepdims=True).astype(s.dtype)
+             if valid is not None else jnp.asarray(ids.shape[-1], s.dtype))
+        return s / jnp.maximum(n, 1)
+    if mode == "max":
+        neg = jnp.finfo(e.dtype).min
+        e = e if valid is None else jnp.where(valid[..., None], e, neg)
+        return jnp.max(e, axis=-2)
+    raise ValueError(mode)
+
+
+def embedding_bag_ragged(table: jax.Array, flat_ids: jax.Array,
+                         segment_ids: jax.Array, num_segments: int, *,
+                         weights: Optional[jax.Array] = None) -> jax.Array:
+    """Ragged bag: flat_ids (N,), segment_ids (N,) -> (num_segments, dim).
+
+    The CSR-offsets EmbeddingBag expressed with segment_sum (TPU-friendly
+    scatter-add)."""
+    e = jnp.take(table, flat_ids, axis=0)
+    if weights is not None:
+        e = e * weights[:, None].astype(e.dtype)
+    return jax.ops.segment_sum(e, segment_ids, num_segments=num_segments)
+
+
+def hash_bucket(ids: jax.Array, vocab: int, *, salt: int = 0x9E3779B9) -> jax.Array:
+    """Deterministic hash trick for open-vocabulary ids (QR-embed style)."""
+    x = ids.astype(jnp.uint32) * jnp.uint32(salt)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    return (x % jnp.uint32(vocab)).astype(jnp.int32)
+
+
+def init_field_tables(rng, vocab_sizes: Sequence[int], dim: int,
+                      *, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    """One table per categorical field (recsys layout)."""
+    keys = jax.random.split(rng, len(vocab_sizes))
+    return {f"field{i}": init_table(keys[i], v, dim, dtype=dtype)
+            for i, v in enumerate(vocab_sizes)}
+
+
+def field_lookup(tables: Dict[str, jax.Array], ids: jax.Array) -> jax.Array:
+    """ids (B, F) with per-field tables -> (B, F, dim)."""
+    cols = [embedding_lookup(tables[f"field{i}"], ids[:, i])
+            for i in range(ids.shape[1])]
+    return jnp.stack(cols, axis=1)
+
+
+__all__ = ["init_table", "embedding_lookup", "embedding_bag",
+           "embedding_bag_ragged", "hash_bucket", "init_field_tables",
+           "field_lookup"]

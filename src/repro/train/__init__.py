@@ -1,0 +1,7 @@
+"""repro.train — optimizer, trainer loop, checkpointing, fault tolerance."""
+from repro.train.optimizer import (OptimizerConfig, OptState, adamw_update,
+                                   init_opt_state, schedule_lr)
+from repro.train.checkpoint import CheckpointManager
+from repro.train.resilience import FailureSupervisor, StragglerMonitor
+from repro.train.trainer import (TrainOptions, TrainState, Trainer,
+                                 init_train_state, make_train_step)

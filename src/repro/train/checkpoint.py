@@ -1,0 +1,154 @@
+"""Checkpointing: atomic, async, keep-k, and elastic (mesh-agnostic restore).
+
+Format: one ``arrays.npz`` (flat path->array) + ``meta.json`` per step dir.
+Writes go to ``<dir>/tmp.<step>`` then os.replace -> ``<dir>/step_<n>`` so a
+crash mid-write never corrupts the latest checkpoint (restart safety).
+
+Elastic restore: arrays are saved as plain host arrays; ``restore`` takes the
+*current* shardings (whatever mesh exists after a failure — e.g. one pod lost,
+(2,16,16) -> (16,16)) and device_puts into them. Nothing about the saved file
+binds it to the mesh it was trained on.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(re.sub(r"[\[\]'\.]", "", str(p)) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _unflatten(tree: Any, arrays: Dict[str, np.ndarray]) -> Any:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = []
+    for path, leaf in flat:
+        key = "/".join(re.sub(r"[\[\]'\.]", "", str(p)) for p in path)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        a = arrays[key]
+        if hasattr(leaf, "shape") and tuple(a.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"ckpt {a.shape} vs target {leaf.shape}")
+        leaves.append(a)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3,
+                 save_interval: int = 100, async_write: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.save_interval = save_interval
+        self.async_write = async_write
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- write ------------------------------------------------------------
+    def save(self, step: int, state: Any, meta: Optional[dict] = None,
+             block: bool = False):
+        # snapshot to host before handing to the writer thread
+        arrays = _flatten(jax.device_get(state))
+        self.wait()
+
+        def write():
+            tmp = os.path.join(self.dir, f"tmp.{step}")
+            final = os.path.join(self.dir, f"step_{step:010d}")
+            os.makedirs(tmp, exist_ok=True)
+            # bf16 has no numpy dtype <-> npz support everywhere; view as u16
+            view, dtypes = {}, {}
+            for k, a in arrays.items():
+                if a.dtype == jax.numpy.bfloat16:
+                    view[k] = a.view(np.uint16)
+                    dtypes[k] = "bfloat16"
+                else:
+                    view[k] = a
+                    dtypes[k] = str(a.dtype)
+            np.savez(os.path.join(tmp, "arrays.npz"), **view)
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump({"step": step, "dtypes": dtypes,
+                           "meta": meta or {}, "time": time.time()}, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            self._gc()
+
+        if self.async_write and not block:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+
+    def maybe_save(self, step: int, state: Any, meta: Optional[dict] = None):
+        if step > 0 and step % self.save_interval == 0:
+            self.save(step, state, meta)
+            return True
+        return False
+
+    def wait(self):
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # -- read -------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(self.dir, name, "meta.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, target: Any, step: Optional[int] = None,
+                shardings: Optional[Any] = None) -> Any:
+        """Restore into the structure of ``target``. ``shardings`` (a pytree
+        of NamedSharding matching target) makes restore elastic: arrays land
+        directly on the current mesh regardless of the saving mesh."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        raw = np.load(os.path.join(d, "arrays.npz"))
+        arrays = {}
+        for k in raw.files:
+            a = raw[k]
+            if meta["dtypes"].get(k) == "bfloat16":
+                a = a.view(jax.numpy.bfloat16)
+            arrays[k] = a
+        tree = _unflatten(target, arrays)
+        if shardings is not None:
+            tree = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        return tree
+
+    def restore_meta(self, step: Optional[int] = None) -> dict:
+        step = step if step is not None else self.latest_step()
+        with open(os.path.join(self.dir, f"step_{step:010d}", "meta.json")) as f:
+            return json.load(f)
+
+
+__all__ = ["CheckpointManager"]

@@ -1,0 +1,93 @@
+"""Fault-tolerance runtime pieces: straggler monitor + failure supervisor.
+
+On a real multi-pod deployment the supervisor wraps the step loop: step
+timings stream into the StragglerMonitor (per-host EWMA; in a single-process
+container host timings are simulated by the tests), and any step exception
+triggers restore-from-checkpoint with a freshly built mesh — possibly smaller
+(elastic), since CheckpointManager.restore is mesh-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerReport:
+    step: int
+    host_times: Dict[int, float]
+    stragglers: List[int]
+    p50: float
+    worst_ratio: float
+
+
+class StragglerMonitor:
+    """EWMA per-host step-time tracker.
+
+    A host is flagged when its EWMA exceeds ``threshold`` x the fleet median
+    for ``patience`` consecutive steps — the hook a scheduler uses to
+    re-slice or evict (we surface the signal; acting on it is deployment
+    policy)."""
+
+    def __init__(self, n_hosts: int, *, alpha: float = 0.2,
+                 threshold: float = 1.5, patience: int = 3):
+        self.n_hosts = n_hosts
+        self.alpha = alpha
+        self.threshold = threshold
+        self.patience = patience
+        self.ewma = np.zeros(n_hosts)
+        self.strikes = np.zeros(n_hosts, dtype=int)
+        self.initialized = False
+
+    def update(self, step: int, host_times: Dict[int, float]) -> StragglerReport:
+        t = np.array([host_times[h] for h in range(self.n_hosts)])
+        if not self.initialized:
+            self.ewma = t.astype(float)
+            self.initialized = True
+        else:
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * t
+        med = float(np.median(self.ewma))
+        over = self.ewma > self.threshold * med
+        self.strikes = np.where(over, self.strikes + 1, 0)
+        flagged = np.flatnonzero(self.strikes >= self.patience).tolist()
+        worst = float(self.ewma.max() / max(med, 1e-9))
+        return StragglerReport(step, dict(enumerate(t)), flagged, med, worst)
+
+
+class FailureSupervisor:
+    """Wraps a step function with restore-on-failure semantics.
+
+    run(state) executes steps; on exception (device loss, preemption), it
+    calls ``recover`` (restore last checkpoint + rebuild mesh) and resumes.
+    ``max_failures`` bounds the retry budget.
+    """
+
+    def __init__(self, recover: Callable[[], object], *, max_failures: int = 3):
+        self.recover = recover
+        self.max_failures = max_failures
+        self.failures = 0
+        self.events: List[dict] = []
+
+    def attempt(self, fn: Callable[[], object]):
+        while True:
+            try:
+                return fn()
+            except Exception as e:  # noqa: BLE001 — deliberate catch-all
+                self.failures += 1
+                self.events.append({"time": time.time(), "error": repr(e)})
+                if self.failures > self.max_failures:
+                    raise
+                fn = self._resume_wrapper(fn)
+
+    def _resume_wrapper(self, fn):
+        state = self.recover()
+
+        def rerun():
+            return fn() if state is None else fn()
+        return rerun
+
+
+__all__ = ["StragglerMonitor", "StragglerReport", "FailureSupervisor"]

@@ -1,0 +1,166 @@
+"""Attention path equivalence (dense == blocked == pallas) + semantic
+properties of the DTI attention (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.windowed import (ResetConfig, attention_blocked,
+                                 attention_dense)
+from repro.kernels.windowed_attn.ops import windowed_attention
+from repro.models.layers import alibi_slopes
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(shape, i, dtype=jnp.float32):
+    return jax.random.normal(jax.random.fold_in(KEY, i), shape, dtype)
+
+
+def _inputs(B=2, S=128, H=4, Hk=2, D=16, seed=0, dtype=jnp.float32):
+    r = np.random.default_rng(seed)
+    q, qn = _rand((B, S, H, D), seed, dtype), _rand((B, S, H, D), seed + 3, dtype)
+    k, kn = _rand((B, S, Hk, D), seed + 1, dtype), _rand((B, S, Hk, D), seed + 4, dtype)
+    v, v0 = _rand((B, S, Hk, D), seed + 2, dtype), _rand((B, S, Hk, D), seed + 5, dtype)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    is_sum = jnp.asarray(r.random((B, S)) < 0.15)
+    valid = jnp.asarray(r.random((B, S)) < 0.9)
+    return q, k, v, qn, kn, v0, pos, is_sum, valid
+
+
+FLAG_SETS = [
+    dict(),                                        # plain window
+    dict(sum=True),                                # isolation only
+    dict(sum=True, nope=True),                     # + NoPE/ALiBi
+    dict(sum=True, nope=True, reset=True),         # full DTI
+]
+
+
+def _kwargs(flags, W, q, k, v, qn, kn, v0, pos, is_sum, valid, H):
+    kw = dict(pos_q=pos, pos_k=pos, window=W, valid_k=valid)
+    if flags.get("sum"):
+        kw.update(is_sum_q=is_sum, is_sum_k=is_sum)
+    if flags.get("nope"):
+        kw.update(q_nope=qn, k_nope=kn, alibi=alibi_slopes(H))
+    if flags.get("reset"):
+        kw.update(v0=v0, reset=ResetConfig(0.05, 0.3, W / 2))
+    return kw
+
+
+class TestEquivalence:
+    @pytest.mark.parametrize("flags", FLAG_SETS)
+    @pytest.mark.parametrize("W", [32, 64])
+    def test_blocked_equals_dense(self, flags, W):
+        q, k, v, qn, kn, v0, pos, is_sum, valid = _inputs()
+        kw = _kwargs(flags, W, q, k, v, qn, kn, v0, pos, is_sum, valid, 4)
+        o_d = attention_dense(q, k, v, **kw)
+        o_b = attention_blocked(q, k, v, **kw)
+        np.testing.assert_allclose(o_d, o_b, atol=2e-5)
+
+    @pytest.mark.parametrize("flags", FLAG_SETS)
+    def test_pallas_equals_dense(self, flags):
+        W = 32
+        q, k, v, qn, kn, v0, pos, is_sum, valid = _inputs()
+        kw = _kwargs(flags, W, q, k, v, qn, kn, v0, pos, is_sum, valid, 4)
+        o_d = attention_dense(q, k, v, **kw)
+        o_p = windowed_attention(q, k, v, **kw, block_size=32)
+        np.testing.assert_allclose(o_d, o_p, atol=2e-5)
+
+    @pytest.mark.parametrize("S,W,blk", [(256, 64, 32), (256, 96, 32),
+                                         (512, 128, 128), (128, 128, 64)])
+    def test_pallas_shape_sweep(self, S, W, blk):
+        q, k, v, qn, kn, v0, pos, is_sum, valid = _inputs(S=S)
+        kw = _kwargs(FLAG_SETS[3], W, q, k, v, qn, kn, v0, pos, is_sum,
+                     valid, 4)
+        o_d = attention_dense(q, k, v, **kw)
+        o_p = windowed_attention(q, k, v, **kw, block_size=blk)
+        np.testing.assert_allclose(o_d, o_p, atol=2e-5)
+
+    def test_pallas_bf16(self):
+        W = 32
+        q, k, v, qn, kn, v0, pos, is_sum, valid = _inputs(dtype=jnp.bfloat16)
+        kw = _kwargs(FLAG_SETS[3], W, q, k, v, qn, kn, v0, pos, is_sum,
+                     valid, 4)
+        o_d = attention_dense(q, k, v, **kw).astype(jnp.float32)
+        o_p = windowed_attention(q, k, v, **kw,
+                                 block_size=32).astype(jnp.float32)
+        np.testing.assert_allclose(o_d, o_p, atol=3e-2, rtol=3e-2)
+
+    def test_mha_no_gqa(self):
+        q, k, v, qn, kn, v0, pos, is_sum, valid = _inputs(Hk=4)
+        kw = _kwargs(FLAG_SETS[3], 32, q, k, v, qn, kn, v0, pos, is_sum,
+                     valid, 4)
+        o_d = attention_dense(q, k, v, **kw)
+        o_p = windowed_attention(q, k, v, **kw, block_size=32)
+        o_b = attention_blocked(q, k, v, **kw)
+        np.testing.assert_allclose(o_d, o_p, atol=2e-5)
+        np.testing.assert_allclose(o_d, o_b, atol=2e-5)
+
+
+class TestSemantics:
+    """The paper's claims about the mechanism, asserted as properties."""
+
+    def test_window_locality(self):
+        """Perturbing a key/value older than `window` must not change a
+        query's output — DTI's train/serve alignment guarantee."""
+        B, S, H, D, W = 1, 64, 2, 8, 16
+        q, k, v, *_ , pos, is_sum, valid = _inputs(B, S, H, H, D)
+        valid = jnp.ones((B, S), bool)
+        t = 50
+        out1 = attention_dense(q, k, v, pos_q=pos, pos_k=pos, window=W)
+        k2 = k.at[:, : t - W].set(9.9)
+        v2 = v.at[:, : t - W].set(-9.9)
+        out2 = attention_dense(q, k2, v2, pos_q=pos, pos_k=pos, window=W)
+        np.testing.assert_allclose(out1[:, t], out2[:, t], atol=1e-6)
+
+    def test_sum_isolation_protects_stream(self):
+        """Perturbing a [SUM] token's k/v must not change any OTHER token's
+        output (the modeling fix: readout states never pollute the stream)."""
+        B, S, H, D, W = 1, 32, 2, 8, 16
+        q, k, v, *_, pos, _, _ = _inputs(B, S, H, H, D)
+        is_sum = jnp.zeros((B, S), bool).at[0, 10].set(True)
+        kw = dict(pos_q=pos, pos_k=pos, window=W, is_sum_q=is_sum,
+                  is_sum_k=is_sum, sum_isolated=True)
+        out1 = attention_dense(q, k, v, **kw)
+        out2 = attention_dense(q, k.at[:, 10].set(7.7),
+                               v.at[:, 10].set(-7.7), **kw)
+        keep = np.ones(S, bool)
+        keep[10] = False
+        np.testing.assert_allclose(out1[0, keep], out2[0, keep], atol=1e-6)
+
+    def test_alibi_shifts_sum_rows_only(self):
+        B, S, H, D, W = 1, 32, 2, 8, 16
+        q, k, v, qn, kn, _, pos, _, _ = _inputs(B, S, H, H, D)
+        is_sum = jnp.zeros((B, S), bool).at[0, 20].set(True)
+        base = dict(pos_q=pos, pos_k=pos, window=W, is_sum_q=is_sum,
+                    is_sum_k=is_sum, q_nope=qn, k_nope=kn)
+        o1 = attention_dense(q, k, v, **base, alibi=alibi_slopes(H))
+        o2 = attention_dense(q, k, v, **base, alibi=10 * alibi_slopes(H))
+        # non-SUM rows identical, SUM row changes
+        keep = np.ones(S, bool)
+        keep[20] = False
+        np.testing.assert_allclose(o1[0, keep], o2[0, keep], atol=1e-6)
+        assert float(jnp.max(jnp.abs(o1[0, 20] - o2[0, 20]))) > 1e-4
+
+    @given(st.integers(1, 6))
+    @settings(max_examples=6, deadline=None)
+    def test_reset_pulls_toward_v0(self, seed):
+        """With y→1 the SUM row's output approaches attention over v0."""
+        B, S, H, D, W = 1, 32, 2, 8, 32
+        q, k, v, qn, kn, v0, pos, _, _ = _inputs(B, S, H, H, D, seed=seed)
+        is_sum = jnp.zeros((B, S), bool).at[0, 31].set(True)
+        kw = dict(pos_q=pos, pos_k=pos, window=W, is_sum_q=is_sum,
+                  is_sum_k=is_sum)
+        full = attention_dense(q, k, v, **kw, v0=v0,
+                               reset=ResetConfig(1.0, 1.0, 0.0))
+        target = attention_dense(q, k, v0, **kw)   # pure v0 attention
+        np.testing.assert_allclose(full[0, 31], target[0, 31], atol=1e-4)
+
+    def test_rows_with_no_keys_are_zero(self):
+        B, S, H, D = 1, 16, 2, 8
+        q, k, v, *_ , pos, _, _ = _inputs(B, S, H, H, D)
+        valid = jnp.zeros((B, S), bool)
+        out = attention_dense(q, k, v, pos_q=pos, pos_k=pos, window=4,
+                              valid_k=valid)
+        np.testing.assert_allclose(out, 0.0, atol=1e-7)

@@ -1,0 +1,122 @@
+"""Data substrate: tokenizer, synthetic corpora, graph sampler, sparse
+embedding ops."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.recsys_gen import RecsysGenerator
+from repro.data.sampler import (make_community_graph, make_molecule_batch,
+                                sample_neighbors)
+from repro.data.synthetic import make_ctr_dataset, split_users
+from repro.data.tokenizer import HashTokenizer
+from repro.sparse.embedding import (embedding_bag, embedding_bag_ragged,
+                                    embedding_lookup, hash_bucket)
+
+
+class TestTokenizer:
+    def test_deterministic_and_in_range(self):
+        tok = HashTokenizer(2048)
+        ids = tok.encode("dark river v17 dark river")
+        assert ids[0] == ids[3] and ids[1] == ids[4]
+        assert all(tok.sp.n_reserved <= i < 2048 for i in ids)
+
+    @given(st.text(alphabet=st.characters(codec="ascii",
+                                          categories=["L", "N"]),
+                   min_size=1, max_size=12))
+    @settings(max_examples=50, deadline=None)
+    def test_never_collides_with_specials(self, word):
+        tok = HashTokenizer(512)
+        assert tok.token_id(word) >= tok.sp.n_reserved
+
+
+class TestSyntheticCTR:
+    def test_labels_follow_latents(self):
+        """The corpus must carry learnable signal: affinity sign predicts
+        the label far better than chance."""
+        ds = make_ctr_dataset(n_users=64, n_items=200, seq_len=50,
+                              label_scale=5.0)
+        correct = total = 0
+        for u, seq in enumerate(ds.sequences):
+            # recompute affinity via the stored latents
+            z = ds.item_latent[seq["items"]]
+            # user latent unknown; use rating as proxy for affinity sign
+            pred = (seq["ratings"] >= 3).astype(int)
+            correct += int((pred == seq["labels"]).sum())
+            total += len(pred)
+        assert correct / total > 0.65
+
+    def test_split_is_chronological(self):
+        ds = make_ctr_dataset(n_users=4, n_items=50, seq_len=40)
+        train, val, test = split_users(ds)
+        toks, labels = ds.user_prompt_material(0)
+        assert len(train[0][0]) == 32            # 80%
+        assert test[0][2] == 36                  # test starts at 90%
+
+
+class TestGraphSampler:
+    def test_fanout_bounds(self, rng):
+        g = make_community_graph(500, 8, 16, 4)
+        seeds = rng.choice(500, size=16, replace=False)
+        sub = sample_neighbors(g, seeds, [5, 3], rng=rng)
+        # padded allocation: seeds x prod(f+1) nodes, seeds x sum(cumprod f)
+        assert sub.node_ids.shape[0] == 16 * (1 + 5) * (1 + 3)
+        assert sub.edge_src.shape[0] == 16 * (5 + 15)
+        assert int(sub.node_valid.sum()) <= 16 * (1 + 5 + 15)
+        n_real = int(sub.edge_valid.sum())
+        assert 0 < n_real <= 16 * 20
+        # all edge endpoints are valid local nodes
+        n_nodes = int(sub.node_valid.sum())
+        assert sub.edge_src[sub.edge_valid].max() < n_nodes
+        assert sub.edge_dst[sub.edge_valid].max() < n_nodes
+
+    def test_seeds_are_first(self, rng):
+        g = make_community_graph(100, 4, 8, 3)
+        seeds = np.asarray([7, 13, 42])
+        sub = sample_neighbors(g, seeds, [2], rng=rng)
+        np.testing.assert_array_equal(sub.node_ids[:3], seeds)
+        np.testing.assert_array_equal(sub.seed_local, [0, 1, 2])
+
+    def test_molecule_batch_shapes(self):
+        x, es, ed, gids, ys = make_molecule_batch(8, 30, 64, 16, 2)
+        assert x.shape == (240, 16)
+        assert es.shape == ed.shape == (512,)
+        assert gids.max() == 7 and ys.shape == (8,)
+
+
+class TestRecsysGen:
+    def test_seq_labels_learnable(self, rng):
+        gen = RecsysGenerator(10_000, scale=6.0)
+        b = gen.seq_batch(4096, 20, rng=rng)
+        # the latent rule should produce both classes, not constant labels
+        assert 0.2 < b["labels"].mean() < 0.8
+
+    def test_field_batch_ranges(self, rng):
+        gen = RecsysGenerator(100)
+        b = gen.field_batch(128, [10, 20, 30], rng=rng)
+        assert b["ids"].shape == (128, 3)
+        assert (b["ids"][:, 2] < 30).all()
+
+
+class TestSparseEmbedding:
+    def test_ragged_equals_padded(self, rng):
+        table = jnp.asarray(rng.normal(size=(50, 8)), jnp.float32)
+        ids = jnp.asarray(rng.integers(0, 50, (4, 6)), jnp.int32)
+        valid = jnp.asarray(rng.random((4, 6)) < 0.7)
+        padded = embedding_bag(table, ids, valid, mode="sum")
+        flat = ids.reshape(-1)[valid.reshape(-1)]
+        seg = jnp.repeat(jnp.arange(4), 6)[valid.reshape(-1)]
+        ragged = embedding_bag_ragged(table, flat, seg, 4)
+        np.testing.assert_allclose(padded, ragged, atol=1e-6)
+
+    def test_lookup_matches_rows(self, rng):
+        table = jnp.asarray(rng.normal(size=(20, 4)), jnp.float32)
+        ids = jnp.asarray([3, 7], jnp.int32)
+        np.testing.assert_array_equal(np.asarray(embedding_lookup(table, ids)),
+                                      np.asarray(table[jnp.asarray([3, 7])]))
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=40, deadline=None)
+    def test_hash_bucket_in_range(self, x):
+        out = int(hash_bucket(jnp.asarray([x]), 1000)[0])
+        assert 0 <= out < 1000

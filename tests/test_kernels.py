@@ -1,0 +1,95 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (ref.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.embedding_bag.ops import embedding_bag
+from repro.kernels.embedding_bag.ref import reference_embedding_bag
+from repro.kernels.windowed_attn.ops import windowed_attention
+from repro.kernels.windowed_attn.ref import reference_attention
+from repro.core.windowed import ResetConfig
+from repro.models.layers import alibi_slopes
+
+KEY = jax.random.PRNGKey(7)
+
+
+class TestWindowedAttnKernel:
+    @pytest.mark.parametrize("B,S,H,Hk,D,W,blk", [
+        (1, 128, 2, 1, 8, 32, 32),
+        (2, 256, 4, 2, 16, 64, 64),
+        (2, 256, 4, 4, 32, 128, 64),
+        (1, 512, 8, 2, 64, 128, 128),
+        (3, 192, 6, 3, 16, 64, 64),     # non-pow2 batch/heads
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, B, S, H, Hk, D, W, blk, dtype):
+        r = np.random.default_rng(B * S + H)
+        def rand(shape, i):
+            return jax.random.normal(jax.random.fold_in(KEY, i), shape,
+                                     dtype)
+        q, qn = rand((B, S, H, D), 0), rand((B, S, H, D), 3)
+        k, kn = rand((B, S, Hk, D), 1), rand((B, S, Hk, D), 4)
+        v, v0 = rand((B, S, Hk, D), 2), rand((B, S, Hk, D), 5)
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        is_sum = jnp.asarray(r.random((B, S)) < 0.1)
+        valid = jnp.asarray(r.random((B, S)) < 0.9)
+        kw = dict(pos_q=pos, pos_k=pos, window=W, is_sum_q=is_sum,
+                  is_sum_k=is_sum, valid_k=valid, q_nope=qn, k_nope=kn,
+                  alibi=alibi_slopes(H), v0=v0,
+                  reset=ResetConfig(0.05, 0.3, W / 2))
+        o_ref = reference_attention(q, k, v, **kw).astype(jnp.float32)
+        o_pl = windowed_attention(q, k, v, **kw,
+                                  block_size=blk).astype(jnp.float32)
+        tol = 2e-5 if dtype == jnp.float32 else 3e-2
+        np.testing.assert_allclose(o_ref, o_pl, atol=tol, rtol=tol)
+
+    def test_jit_and_grad_through_kernel(self):
+        B, S, H, D, W = 1, 128, 2, 16, 32
+        q = jax.random.normal(KEY, (B, S, H, D))
+        k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, H, D))
+        v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, H, D))
+        pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+        @jax.jit
+        def f(q):
+            return windowed_attention(q, k, v, pos_q=pos, pos_k=pos,
+                                      window=W, block_size=32).sum()
+        v1 = f(q)
+        assert np.isfinite(float(v1))
+
+
+class TestEmbeddingBagKernel:
+    @pytest.mark.parametrize("V,D,B,H", [
+        (64, 8, 4, 3), (512, 32, 16, 8), (1000, 128, 8, 20), (37, 16, 5, 7),
+    ])
+    @pytest.mark.parametrize("mode", ["sum", "mean"])
+    def test_sweep(self, V, D, B, H, mode, rng):
+        table = jnp.asarray(rng.normal(size=(V, D)), jnp.float32)
+        ids = jnp.asarray(rng.integers(0, V, (B, H)), jnp.int32)
+        valid = jnp.asarray(rng.random((B, H)) < 0.8)
+        o_ref = reference_embedding_bag(table, ids, valid, mode=mode)
+        o_pl = embedding_bag(table, ids, valid, mode=mode)
+        np.testing.assert_allclose(o_ref, o_pl, atol=1e-5, rtol=1e-5)
+
+    def test_weights(self, rng):
+        table = jnp.asarray(rng.normal(size=(100, 16)), jnp.float32)
+        ids = jnp.asarray(rng.integers(0, 100, (8, 5)), jnp.int32)
+        w = jnp.asarray(rng.normal(size=(8, 5)), jnp.float32)
+        o_ref = reference_embedding_bag(table, ids, None, mode="sum",
+                                        weights=w)
+        o_pl = embedding_bag(table, ids, None, mode="sum", weights=w)
+        np.testing.assert_allclose(o_ref, o_pl, atol=1e-5, rtol=1e-5)
+
+    def test_bf16_table(self, rng):
+        table = jnp.asarray(rng.normal(size=(64, 32)), jnp.bfloat16)
+        ids = jnp.asarray(rng.integers(0, 64, (4, 6)), jnp.int32)
+        o_ref = reference_embedding_bag(table, ids, None).astype(jnp.float32)
+        o_pl = embedding_bag(table, ids, None).astype(jnp.float32)
+        np.testing.assert_allclose(o_ref, o_pl, atol=2e-2, rtol=2e-2)
+
+    def test_all_invalid_bag_is_zero(self, rng):
+        table = jnp.asarray(rng.normal(size=(10, 8)), jnp.float32)
+        ids = jnp.asarray(rng.integers(0, 10, (2, 4)), jnp.int32)
+        valid = jnp.zeros((2, 4), bool)
+        np.testing.assert_allclose(embedding_bag(table, ids, valid), 0.0)
