@@ -19,7 +19,8 @@ import jax
 import numpy as np
 
 from repro.configs import get_arch
-from repro.core.dti import batch_prompts
+from repro.core.dti import (PromptStats, batch_prompts, pack_prompts,
+                            train_max_len)
 from repro.data.synthetic import make_ctr_dataset, split_users
 from repro.launch.train import (build_prompt_sets, evaluate_lm,
                                 make_lm_loss_fn)
@@ -55,10 +56,14 @@ class ReproSetup:
     window: int = 0          # 0 = dense full causal at repro scale
 
     @classmethod
-    def default(cls, *, users=48, items=300, seq=60, seed=0,
+    def default(cls, *, users=48, items=300, seq=60, min_seq=None, seed=0,
                 n_ctx=10) -> "ReproSetup":
+        """``min_seq``: long-tailed per-user history lengths (realistic CTR
+        regime; makes prompt lengths heterogeneous, which is what segment
+        packing reclaims). None keeps the historical all-equal corpus."""
         cfg = get_arch("dti-llama").smoke
         ds = make_ctr_dataset(n_users=users, n_items=items, seq_len=seq,
+                              min_seq_len=min_seq,
                               vocab_size=cfg.vocab_size, seed=seed,
                               label_scale=5.0)
         return cls(cfg, ds, split_users(ds), n_ctx=n_ctx)
@@ -67,7 +72,8 @@ class ReproSetup:
 def run_paradigm(setup: ReproSetup, *, paradigm: str, k: int,
                  steps: Optional[int] = None, epochs: Optional[float] = None,
                  batch: int = 8, lr: float = 1e-3, seed: int = 0,
-                 fixes: Optional[Dict[str, bool]] = None) -> Dict:
+                 fixes: Optional[Dict[str, bool]] = None,
+                 pack: bool = False) -> Dict:
     """Train one paradigm variant end-to-end, return metrics + wall clock.
 
     ``epochs``: full passes over the paradigm's own prompt set — the paper's
@@ -76,6 +82,8 @@ def run_paradigm(setup: ReproSetup, *, paradigm: str, k: int,
     matched-update comparisons.
     fixes: {"reset": bool, "pos": bool} — the two bottleneck solutions;
     both True = DTI, both False = DTI-, ignored for paradigm='sw'.
+    ``pack``: bin-pack prompts into shared segment-isolated rows; an epoch
+    then takes fewer, denser rows (same supervised targets).
     """
     cfg = setup.cfg
     fixes = fixes or {"reset": True, "pos": True}
@@ -85,12 +93,15 @@ def run_paradigm(setup: ReproSetup, *, paradigm: str, k: int,
         cfg = dataclasses.replace(cfg, dti_reset=fixes["reset"],
                                   dti_sum_alibi=fixes["pos"])
 
-    max_len = int((setup.n_ctx + (1 if paradigm == "sw" else k))
-                  * (setup.ds.avg_item_tokens + 1.5) + 8)
-    max_len = ((max_len + 63) // 64) * 64
+    max_len = train_max_len(setup.n_ctx, 1 if paradigm == "sw" else k,
+                            setup.ds.avg_item_tokens)
     train_prompts, test_prompts, test_labels, stats = build_prompt_sets(
         setup.ds, setup.splits, paradigm="sw" if paradigm == "sw" else "dti",
         n_ctx=setup.n_ctx, k=k, max_len=max_len)
+    if pack:
+        pstats = PromptStats()
+        train_prompts = pack_prompts(train_prompts, max_len, stats=pstats)
+        stats = pstats
     if steps is None:
         assert epochs is not None
         steps = max(2, int(round(epochs * len(train_prompts) / batch)))
@@ -121,10 +132,15 @@ def run_paradigm(setup: ReproSetup, *, paradigm: str, k: int,
 
     metrics = evaluate_lm(state.params, cfg, setup.window, test_prompts,
                           test_labels)
+    # effective throughput: non-pad tokens pushed through the timed steps
+    eff_tok_s = ((steps - 1) * batch * max_len * (1.0 - stats.pad_fraction)
+                 / max(train_time, 1e-9))
     return {"paradigm": paradigm, "k": k, "steps": steps,
             "train_time_s": train_time,
             "tokens": stats.n_tokens, "prompts": stats.n_prompts,
-            "targets": stats.n_targets,
+            "targets": stats.n_targets, "rows": len(train_prompts),
+            "packed": bool(pack), "pad_fraction": stats.pad_fraction,
+            "effective_tokens_per_s": eff_tok_s,
             "time_per_target_us": train_time / max(stats.n_targets, 1) * 1e6,
             "loss_last": float(np.mean(losses[-10:])) if losses else 0.0,
             **metrics}

@@ -12,13 +12,16 @@ import numpy as np
 
 from benchmarks.common import ReproSetup, emit
 from repro.core.dti import PromptStats, build_sliding_prompts, \
-    build_streaming_prompts
+    build_streaming_prompts, pack_prompts, train_max_len
 from repro.core.flops import (dti_flops, flops_reduction_approx,
                               flops_reduction_exact, sliding_window_flops)
 
 
 def main(setup: ReproSetup = None):
-    setup = setup or ReproSetup.default()
+    # long-tailed per-user histories (min_seq < seq): the realistic CTR
+    # regime where prompt lengths are heterogeneous and packing has pad
+    # slots to reclaim at every k, not just when k doesn't divide seq_len
+    setup = setup or ReproSetup.default(min_seq=12)
     ds = setup.ds
     c = ds.avg_item_tokens + 1          # tokens / interaction (+SUM share)
     n = setup.n_ctx
@@ -27,23 +30,44 @@ def main(setup: ReproSetup = None):
         N, K = n * c, k * c
         approx = flops_reduction_approx(N, K, k)
 
+        max_len = train_max_len(n, k, ds.avg_item_tokens)
         s_sw, s_dti = PromptStats(), PromptStats()
+        dti_prompts = []
         m_total = 0
         for u in range(len(ds.sequences)):
             toks, labels = ds.user_prompt_material(u)
             m_total += len(toks)
             build_sliding_prompts(toks, labels, n_ctx=n, max_len=8192,
                                   stats=s_sw)
-            build_streaming_prompts(toks, labels, n_ctx=n, k=k,
-                                    max_len=8192, stats=s_dti)
+            dti_prompts += build_streaming_prompts(toks, labels, n_ctx=n,
+                                                   k=k, max_len=max_len,
+                                                   stats=s_dti)
         # attention cost ~ tokens * min(window, len); window == N here
         measured = s_sw.n_tokens / s_dti.n_tokens
         exact = flops_reduction_exact(m_total, n, k,
                                       int(N), int(K))
-        rows.append((k, approx, exact, measured))
+        # pad budget: unpacked at the training row shape vs segment-packed.
+        # Packed rows host multiple segments, so the packer gets twice the
+        # row length — that amortises row-boundary waste (a single 128-slot
+        # row can never hold two 68-token prompts) and windowed attention
+        # keeps the per-token cost flat in row length. The metric name says
+        # so: table3's pad= fields pack at 1x max_len (the dense-attention
+        # trainer shape) and are not directly comparable.
+        s_packed = PromptStats()
+        pack_prompts(dti_prompts, 2 * max_len, stats=s_packed)
+        rows.append((k, approx, exact, measured,
+                     s_dti.pad_fraction, s_packed.pad_fraction))
         emit(f"eq3_reduction_k{k}", 0.0,
              f"approx={approx:.2f}x exact={exact:.2f}x "
-             f"measured_tokens={measured:.2f}x")
+             f"measured_tokens={measured:.2f}x "
+             f"pad_unpacked={s_dti.pad_fraction:.3f} "
+             f"pad_packed_2xrow={s_packed.pad_fraction:.3f} "
+             f"rows={s_dti.n_rows}->{s_packed.n_rows}")
+    # workload-level pad budget across all k
+    unp = float(np.mean([r[4] for r in rows]))
+    pkd = float(np.mean([r[5] for r in rows]))
+    emit("eq3_pad_fraction_overall", 0.0,
+         f"unpacked={unp:.3f} packed_2xrow={pkd:.3f}")
     # the paper's headline example
     emit("eq3_paper_example_n20_k50", 0.0,
          f"{flops_reduction_approx(200, 500, 50):.2f}x (paper: 14.28x)")

@@ -29,20 +29,26 @@ def main(ks=(10, 30, 50), epochs: float = 2.0, quick=False):
     sw["variant"] = "SW"
     rows.append(sw)
     emit("table3_sw", sw["train_time_s"] * 1e6,
-         f"auc={sw['auc']:.4f} time={sw['train_time_s']:.1f}s")
+         f"auc={sw['auc']:.4f} time={sw['train_time_s']:.1f}s "
+         f"pad={sw['pad_fraction']:.3f}")
     for k in ks:
-        r = run_paradigm(setup, paradigm="dti", k=k, epochs=epochs)
-        r["variant"] = f"DTI k={k}"
-        red = (1 - r["train_time_s"] / sw["train_time_s"]) * 100
-        pred = flops_reduction_approx(setup.n_ctx * c, k * c, k)
-        r["reduction_pct"] = red
-        r["eq3_predicted_x"] = pred
-        r["measured_x"] = sw["train_time_s"] / r["train_time_s"]
-        rows.append(r)
-        emit(f"table3_dti_k{k}", r["train_time_s"] * 1e6,
-             f"auc={r['auc']:.4f} time={r['train_time_s']:.1f}s "
-             f"red={red:.1f}% eq3_pred={pred:.2f}x "
-             f"measured={r['measured_x']:.2f}x")
+        for pack in (False, True):
+            r = run_paradigm(setup, paradigm="dti", k=k, epochs=epochs,
+                             pack=pack)
+            r["variant"] = f"DTI k={k}" + (" packed" if pack else "")
+            red = (1 - r["train_time_s"] / sw["train_time_s"]) * 100
+            pred = flops_reduction_approx(setup.n_ctx * c, k * c, k)
+            r["reduction_pct"] = red
+            r["eq3_predicted_x"] = pred
+            r["measured_x"] = sw["train_time_s"] / r["train_time_s"]
+            rows.append(r)
+            tag = f"table3_dti_k{k}" + ("_packed" if pack else "")
+            emit(tag, r["train_time_s"] * 1e6,
+                 f"auc={r['auc']:.4f} time={r['train_time_s']:.1f}s "
+                 f"red={red:.1f}% eq3_pred={pred:.2f}x "
+                 f"measured={r['measured_x']:.2f}x "
+                 f"pad={r['pad_fraction']:.3f} "
+                 f"eff_tok_s={r['effective_tokens_per_s']:.0f}")
     os.makedirs(os.path.dirname(OUT), exist_ok=True)
     with open(OUT, "w") as f:
         json.dump(rows, f, indent=1)

@@ -1,18 +1,23 @@
 """DTI prompt formulation: sliding-window (baseline) and streaming prompts.
 
 Data-pipeline side of the paper (sections 3.1, 3.2, 3.4): pure numpy, feeds
-the jitted train step with fixed-shape padded batches:
+the jitted train step with fixed-shape padded batches (the canonical batch
+schema shared by every downstream layer — see docs/batch_schema.md):
 
-  tokens    (L,) int32
-  positions (L,) int32   physical token index (what window masks use)
-  is_sum    (L,) bool    [SUM] readout positions
-  labels    (L,) int32   1='yes' at SUM positions, 0 elsewhere/negative
-  valid     (L,) bool    padding mask
+  tokens      (L,) int32
+  positions   (L,) int32   token index, restarting at 0 per segment
+  segment_ids (L,) int32   packed-prompt id within the row; -1 on padding
+  is_sum      (L,) bool    [SUM] readout positions
+  labels      (L,) int32   1='yes' at SUM positions, 0 elsewhere/negative
+  valid       (L,) bool    padding mask
 
 The sliding-window builder emits one prompt per target (stride 1); the
 streaming builder emits one prompt per k targets (stride k) with a [SUM]
-token after each target. Token budget bookkeeping (`PromptStats`) feeds the
-Eq. 3 validation benchmark.
+token after each target. ``pack_prompts`` then bin-packs several prompts
+into one row (first-fit decreasing); attention layers isolate the segments
+via ``segment_ids`` so prompts from different users share a row without
+hidden-state leakage. Token budget bookkeeping (`PromptStats`, including
+pad-slot accounting) feeds the Eq. 3 validation benchmark.
 """
 from __future__ import annotations
 
@@ -38,11 +43,31 @@ class PromptStats:
     n_prompts: int = 0
     n_tokens: int = 0          # non-pad tokens fed to the model
     n_targets: int = 0         # supervised [SUM] positions
+    n_rows: int = 0            # physical batch rows (== n_prompts unpacked)
+    n_slots: int = 0           # rows * max_len (pad slots included)
 
-    def add(self, tokens: int, targets: int):
+    def add(self, tokens: int, targets: int, slots: int = 0):
         self.n_prompts += 1
         self.n_tokens += tokens
         self.n_targets += targets
+        if slots:
+            self.n_rows += 1
+            self.n_slots += slots
+
+    def add_packed_row(self, tokens: int, prompts: int, targets: int,
+                       slots: int):
+        self.n_prompts += prompts
+        self.n_tokens += tokens
+        self.n_targets += targets
+        self.n_rows += 1
+        self.n_slots += slots
+
+    @property
+    def pad_fraction(self) -> float:
+        """Share of batch slots burnt on pad tokens."""
+        if self.n_slots == 0:
+            return 0.0
+        return 1.0 - self.n_tokens / self.n_slots
 
 
 def _pad_to(arr: np.ndarray, length: int, fill=0) -> np.ndarray:
@@ -60,8 +85,11 @@ def _pack(tokens: List[int], is_sum: List[bool], labels: List[int],
     l = _pad_to(np.asarray(labels, np.int32), max_len, 0)
     valid = np.zeros((max_len,), bool)
     valid[:n] = True
+    seg = np.full((max_len,), -1, np.int32)
+    seg[:n] = 0
     return {"tokens": t, "is_sum": s, "labels": l, "valid": valid,
-            "positions": np.arange(max_len, dtype=np.int32)}
+            "positions": np.arange(max_len, dtype=np.int32),
+            "segment_ids": seg}
 
 
 def build_sliding_prompts(
@@ -81,7 +109,7 @@ def build_sliding_prompts(
         is_sum = [False] * (len(toks) - 1) + [True]
         lab = [0] * (len(toks) - 1) + [int(labels[i])]
         if stats is not None:
-            stats.add(len(toks), 1)
+            stats.add(len(toks), 1, slots=max_len)
         out.append(_pack(toks, is_sum, lab, max_len, sp))
     return out
 
@@ -111,10 +139,77 @@ def build_streaming_prompts(
             is_sum.append(True)
             lab.append(int(labels[j]))
         if stats is not None:
-            stats.add(len(toks), len(targets))
+            stats.add(len(toks), len(targets), slots=max_len)
         out.append(_pack(toks, is_sum, lab, max_len, sp))
         i += k
     return out
+
+
+def prompt_length(p: Dict[str, np.ndarray]) -> int:
+    """Non-pad length of a built prompt (valid is always a prefix)."""
+    return int(p["valid"].sum())
+
+
+def pack_prompts(prompts: List[Dict[str, np.ndarray]], max_len: int, *,
+                 sp: SpecialTokens = SpecialTokens(),
+                 stats: PromptStats | None = None,
+                 ) -> List[Dict[str, np.ndarray]]:
+    """Greedy first-fit-decreasing packing of prompts into shared rows.
+
+    Each output row holds one or more whole prompts back to back (a prompt
+    never straddles rows). Per row:
+
+      segment_ids  0,1,2,... per packed prompt, -1 on padding
+      positions    restart at 0 at each segment boundary, so RoPE / window /
+                   ALiBi / reset distances match the unpacked prompt exactly
+      tokens/is_sum/labels/valid  concatenated prompt fields
+
+    Cross-segment isolation is enforced downstream by the seg_q == seg_k
+    term of ``repro.core.windowed.dti_mask`` (and its blocked / Pallas
+    equivalents), so rows can mix prompts from different users.
+    """
+    lengths = [prompt_length(p) for p in prompts]
+    for n in lengths:
+        assert 0 < n <= max_len, f"prompt length {n} not in (0, {max_len}]"
+    order = sorted(range(len(prompts)), key=lambda i: -lengths[i])
+    bins: List[List[int]] = []
+    free: List[int] = []
+    for i in order:
+        n = lengths[i]
+        for b, cap in enumerate(free):
+            if n <= cap:
+                bins[b].append(i)
+                free[b] = cap - n
+                break
+        else:
+            bins.append([i])
+            free.append(max_len - n)
+
+    rows = []
+    for members in bins:
+        t = np.full((max_len,), sp.pad, np.int32)
+        pos = np.zeros((max_len,), np.int32)
+        seg = np.full((max_len,), -1, np.int32)
+        s = np.zeros((max_len,), bool)
+        lab = np.zeros((max_len,), np.int32)
+        valid = np.zeros((max_len,), bool)
+        off = 0
+        for si, i in enumerate(members):
+            n = lengths[i]
+            p = prompts[i]
+            sl = slice(off, off + n)
+            t[sl] = p["tokens"][:n]
+            pos[sl] = np.arange(n, dtype=np.int32)
+            seg[sl] = si
+            s[sl] = p["is_sum"][:n]
+            lab[sl] = p["labels"][:n]
+            valid[sl] = True
+            off += n
+        if stats is not None:
+            stats.add_packed_row(off, len(members), int(s.sum()), max_len)
+        rows.append({"tokens": t, "positions": pos, "segment_ids": seg,
+                     "is_sum": s, "labels": lab, "valid": valid})
+    return rows
 
 
 def batch_prompts(prompts: List[Dict[str, np.ndarray]],
@@ -134,6 +229,17 @@ def batch_prompts(prompts: List[Dict[str, np.ndarray]],
                for key in prompts[0]}
 
 
+def train_max_len(n_ctx: int, k: int, avg_item_tokens: float) -> int:
+    """Fixed-shape training row length for prompts with ``n_ctx`` context
+    interactions and ``k`` targets (1 for sliding-window): headroom over the
+    expected token count (BOS, one [SUM] per target, margin), rounded up to
+    a multiple of 64. The single source of truth shared by the trainer and
+    the benchmarks — pad-fraction numbers are only comparable when every
+    harness builds rows of this shape."""
+    n = int((n_ctx + k) * (avg_item_tokens + 1.5) + 8)
+    return ((n + 63) // 64) * 64
+
+
 def window_tokens(n_ctx: int, avg_item_tokens: float, cap: int = 1024) -> int:
     """Token-level attention window covering n_ctx interactions, capped
     (the paper caps at 1024)."""
@@ -141,4 +247,5 @@ def window_tokens(n_ctx: int, avg_item_tokens: float, cap: int = 1024) -> int:
 
 
 __all__ = ["SpecialTokens", "PromptStats", "build_sliding_prompts",
-           "build_streaming_prompts", "batch_prompts", "window_tokens"]
+           "build_streaming_prompts", "pack_prompts", "prompt_length",
+           "batch_prompts", "train_max_len", "window_tokens"]

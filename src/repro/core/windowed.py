@@ -56,13 +56,18 @@ def reset_alpha(dist: jax.Array, cfg: ResetConfig) -> jax.Array:
 
 def dti_mask(pos_q: jax.Array, pos_k: jax.Array, *, window: int,
              is_sum_k: Optional[jax.Array] = None,
-             valid_k: Optional[jax.Array] = None) -> jax.Array:
+             valid_k: Optional[jax.Array] = None,
+             seg_q: Optional[jax.Array] = None,
+             seg_k: Optional[jax.Array] = None) -> jax.Array:
     """Boolean (..., Sq, Sk) mask: True = attendable.
 
     causal  : pos_q >= pos_k
     window  : pos_q - pos_k <= window (window == 0 -> unlimited, pure causal)
     SUM-iso : keys that are [SUM] tokens only attend-able by themselves
     valid_k : padding mask for keys
+    segment : packed rows — queries only attend keys of their own segment
+              (positions restart per segment, so without this term a later
+              segment's small pos_q would alias into earlier segments)
     """
     d = pos_q[..., :, None] - pos_k[..., None, :]
     m = d >= 0
@@ -72,6 +77,8 @@ def dti_mask(pos_q: jax.Array, pos_k: jax.Array, *, window: int,
         m = m & (~is_sum_k[..., None, :] | (d == 0))
     if valid_k is not None:
         m = m & valid_k[..., None, :]
+    if seg_q is not None and seg_k is not None:
+        m = m & (seg_q[..., :, None] == seg_k[..., None, :])
     return m
 
 
@@ -99,6 +106,8 @@ def attention_dense(
     is_sum_q: Optional[jax.Array] = None,   # (B, Sq) bool
     is_sum_k: Optional[jax.Array] = None,   # (B, Sk) bool
     valid_k: Optional[jax.Array] = None,    # (B, Sk) bool
+    seg_q: Optional[jax.Array] = None,      # (B, Sq) int32 packed segments
+    seg_k: Optional[jax.Array] = None,      # (B, Sk) int32
     q_nope: Optional[jax.Array] = None,     # unrotated q for SUM rows
     k_nope: Optional[jax.Array] = None,     # unrotated k for SUM rows
     alibi: Optional[jax.Array] = None,      # (H,) slopes for SUM rows
@@ -130,7 +139,7 @@ def attention_dense(
 
     mask = dti_mask(pos_q, pos_k, window=window,
                     is_sum_k=is_sum_k if sum_isolated else None,
-                    valid_k=valid_k)                       # (B,Sq,Sk)
+                    valid_k=valid_k, seg_q=seg_q, seg_k=seg_k)  # (B,Sq,Sk)
     logits = jnp.where(mask[:, None, :, :], logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1)
     # rows with no attendable key (padding) -> zero output
@@ -171,6 +180,8 @@ def attention_blocked(
     is_sum_q: Optional[jax.Array] = None,
     is_sum_k: Optional[jax.Array] = None,
     valid_k: Optional[jax.Array] = None,
+    seg_q: Optional[jax.Array] = None,
+    seg_k: Optional[jax.Array] = None,
     q_nope: Optional[jax.Array] = None,
     k_nope: Optional[jax.Array] = None,
     alibi: Optional[jax.Array] = None,
@@ -184,7 +195,10 @@ def attention_blocked(
 
     Requires Sq == Sk == S, S % window == 0, window > 0. Each query block i
     attends kv blocks {i-1, i}; the (pos_q - pos_k <= window) mask inside the
-    pair keeps semantics exact.
+    pair keeps semantics exact. Packed rows keep the block-pair invariant:
+    positions restart per segment and segments are contiguous, so physical
+    distance == positional distance for every same-segment pair, and the
+    seg_q == seg_k mask term kills cross-segment aliases inside the pair.
 
     ``q_chunk``: when the sequence has more than q_chunk blocks, q-block
     chunks are processed sequentially (lax.map) so live fp32 logits stay
@@ -230,6 +244,10 @@ def attention_blocked(
         xs["sq_b"] = _to_blocks(is_sum_q, blk)
     if sum_isolated and is_sum_k is not None:
         xs["sk_b"] = _with_prev(_to_blocks(is_sum_k, blk))
+    if seg_q is not None and seg_k is not None:
+        xs["sgq_b"] = _to_blocks(seg_q, blk)
+        # prev-of-block-0 zero padding is already masked via pad_valid
+        xs["sgk_b"] = _with_prev(_to_blocks(seg_k, blk))
     if use_reset:
         xs["v0b"] = _with_prev(_to_blocks(_repeat_kv(v0, n_rep), blk))
 
@@ -250,6 +268,8 @@ def attention_blocked(
         mask = (d >= 0) & (d <= window) & c["pad_valid"][:, :, None, :]
         if "sk_b" in c:
             mask = mask & (~c["sk_b"][:, :, None, :] | (d == 0))
+        if "sgq_b" in c:
+            mask = mask & (c["sgq_b"][:, :, :, None] == c["sgk_b"][:, :, None, :])
 
         logits = jnp.where(mask[:, :, None, :, :], logits, NEG_INF)
         probs = jax.nn.softmax(logits, axis=-1)

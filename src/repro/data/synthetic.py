@@ -56,9 +56,14 @@ class CTRDataset:
 
 
 def make_ctr_dataset(*, n_users: int = 64, n_items: int = 400,
-                     seq_len: int = 80, latent_dim: int = 4,
+                     seq_len: int = 80, min_seq_len: int | None = None,
+                     latent_dim: int = 4,
                      vocab_size: int = 2048, label_scale: float = 3.0,
                      seed: int = 0) -> CTRDataset:
+    """``min_seq_len``: when set, per-user history lengths are drawn
+    uniformly from [min_seq_len, seq_len] instead of all-equal — the
+    long-tailed regime real CTR corpora live in (short histories + partial
+    last-k groups are what segment packing reclaims)."""
     rng = np.random.default_rng(seed)
     tok = HashTokenizer(vocab_size)
 
@@ -77,10 +82,12 @@ def make_ctr_dataset(*, n_users: int = 64, n_items: int = 400,
     sequences = []
     for u in range(n_users):
         p = rng.normal(size=(latent_dim,)) / np.sqrt(latent_dim)
-        items = rng.integers(0, n_items, size=seq_len)
+        m = (seq_len if min_seq_len is None
+             else int(rng.integers(min_seq_len, seq_len + 1)))
+        items = rng.integers(0, n_items, size=m)
         aff = z[items] @ p * label_scale
         probs = 1.0 / (1.0 + np.exp(-aff))
-        labels = (rng.random(seq_len) < probs).astype(np.int64)
+        labels = (rng.random(m) < probs).astype(np.int64)
         ratings = np.clip(np.round(2.5 + 1.5 * np.tanh(aff)), 1, 5).astype(int)
         sequences.append({"items": items, "ratings": ratings, "labels": labels})
 

@@ -33,6 +33,8 @@ def windowed_attention(
     is_sum_q: Optional[jax.Array] = None,
     is_sum_k: Optional[jax.Array] = None,
     valid_k: Optional[jax.Array] = None,
+    seg_q: Optional[jax.Array] = None,
+    seg_k: Optional[jax.Array] = None,
     q_nope: Optional[jax.Array] = None,
     k_nope: Optional[jax.Array] = None,
     alibi: Optional[jax.Array] = None,
@@ -51,6 +53,7 @@ def windowed_attention(
     out = windowed_attention_bhsd(
         t(q), t(k), t(v), pos_q, pos_k, window=window,
         sum_q=is_sum_q, sum_k=is_sum_k, valid_k=valid_k,
+        seg_q=seg_q, seg_k=seg_k,
         q_nope=t(q_nope) if use_nope else None,
         k_nope=t(k_nope) if use_nope else None,
         alibi=alibi if use_nope else None,

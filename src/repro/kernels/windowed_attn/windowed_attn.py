@@ -31,17 +31,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# renamed TPUCompilerParams -> CompilerParams across jax versions
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 NEG_INF = -1e30
 
 
 def _kernel(pos_q_ref, pos_k_ref, sum_q_ref, sum_k_ref, valid_k_ref,
+            seg_q_ref, seg_k_ref,
             alibi_ref,
             q_ref, k_ref, v_ref, qn_ref, kn_ref, v0_ref,
             o_ref,
             m_ref, l_ref, acc_ref,
             *, blk: int, n_kv: int, window: int, scale: float,
-            sum_isolated: bool, use_nope: bool, use_reset: bool,
-            y_min: float, y_max: float, midpoint: float):
+            sum_isolated: bool, use_seg: bool, use_nope: bool,
+            use_reset: bool, y_min: float, y_max: float, midpoint: float):
     ikv = pl.program_id(3)
     iq = pl.program_id(2)
 
@@ -69,10 +73,13 @@ def _kernel(pos_q_ref, pos_k_ref, sum_q_ref, sum_k_ref, valid_k_ref,
         sn = sn - alibi_ref[0] * d.astype(jnp.float32)
         s = jnp.where(sum_q[:, None], sn, s)
 
-    # mask: causal + window + key-padding (+ SUM isolation) + real kv block
+    # mask: causal + window + key-padding (+ SUM isolation) (+ same packed
+    # segment) + real kv block
     mask = (d >= 0) & (d <= window) & (valid_k_ref[0] != 0)[None, :]
     if sum_isolated:
         mask &= (sum_k_ref[0] == 0)[None, :] | (d == 0)
+    if use_seg:
+        mask &= seg_q_ref[0][:, None] == seg_k_ref[0][None, :]
     j_actual = iq - (n_kv - 1) + ikv
     mask &= j_actual >= 0                                  # clamped block
     s = jnp.where(mask, s, NEG_INF)
@@ -117,6 +124,8 @@ def windowed_attention_bhsd(
     sum_q: Optional[jax.Array] = None,     # (B, S) int32 flags
     sum_k: Optional[jax.Array] = None,
     valid_k: Optional[jax.Array] = None,
+    seg_q: Optional[jax.Array] = None,     # (B, S) int32 packed segments
+    seg_k: Optional[jax.Array] = None,
     q_nope: Optional[jax.Array] = None,    # (B, H, S, D)
     k_nope: Optional[jax.Array] = None,    # (B, Hk, S, D)
     alibi: Optional[jax.Array] = None,     # (H,) f32
@@ -140,10 +149,13 @@ def windowed_attention_bhsd(
 
     use_nope = q_nope is not None
     use_reset = reset is not None and v0 is not None
+    use_seg = seg_q is not None and seg_k is not None
     i32 = functools.partial(jnp.asarray, dtype=jnp.int32)
     sum_q_i = i32(sum_q if sum_q is not None else jnp.zeros((b, s)))
     sum_k_i = i32(sum_k if sum_k is not None else jnp.zeros((b, s)))
     valid_i = i32(valid_k if valid_k is not None else jnp.ones((b, s)))
+    seg_q_i = i32(seg_q if use_seg else jnp.zeros((b, s)))
+    seg_k_i = i32(seg_k if use_seg else jnp.zeros((b, s)))
     alibi_f = (alibi if alibi is not None
                else jnp.zeros((h,))).astype(jnp.float32)
     zero_bh = jnp.zeros((b, 1, s, d), q.dtype)
@@ -176,7 +188,7 @@ def windowed_attention_bhsd(
     out = pl.pallas_call(
         functools.partial(
             _kernel, blk=blk, n_kv=n_kv, window=window, scale=scale,
-            sum_isolated=sum_isolated, use_nope=use_nope,
+            sum_isolated=sum_isolated, use_seg=use_seg, use_nope=use_nope,
             use_reset=use_reset, y_min=float(y_min), y_max=float(y_max),
             midpoint=float(midpoint)),
         grid=grid,
@@ -186,6 +198,8 @@ def windowed_attention_bhsd(
             pl.BlockSpec((1, blk), seq_q_idx),                  # sum_q
             pl.BlockSpec((1, blk), seq_k_idx),                  # sum_k
             pl.BlockSpec((1, blk), seq_k_idx),                  # valid_k
+            pl.BlockSpec((1, blk), seq_q_idx),                  # seg_q
+            pl.BlockSpec((1, blk), seq_k_idx),                  # seg_k
             pl.BlockSpec((1,), lambda bi, hi, qi, ki: (hi,)),   # alibi
             pl.BlockSpec((1, 1, blk, d),
                          lambda bi, hi, qi, ki: (bi, hi, qi, 0)),  # q
@@ -203,12 +217,12 @@ def windowed_attention_bhsd(
             pltpu.VMEM((blk, 1), jnp.float32),      # l (row denom)
             pltpu.VMEM((blk, d), jnp.float32),      # acc (value accum)
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
     )(pos_q.astype(jnp.int32), pos_k.astype(jnp.int32), sum_q_i, sum_k_i,
-      valid_i, alibi_f, q, k, v, qn, kn, v0_)
+      valid_i, seg_q_i, seg_k_i, alibi_f, q, k, v, qn, kn, v0_)
     return out
 
 

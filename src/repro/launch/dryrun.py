@@ -24,7 +24,7 @@ import traceback
 import jax
 
 from repro.configs import ASSIGNED, all_cells, get_arch
-from repro.launch.hlo import analyze_hlo, collective_bytes
+from repro.launch.hlo import analyze_hlo, collective_bytes, xla_cost_analysis
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import roofline_terms
 from repro.launch.steps import build_cell
@@ -46,7 +46,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool,
     t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = xla_cost_analysis(compiled)
     hlo = compiled.as_text()
     # trip-count-aware accounting (repro.launch.hlo.analyze_hlo): XLA's own
     # cost_analysis visits while bodies once, undercounting scanned

@@ -173,7 +173,17 @@ def count_op(hlo_text: str, opname: str) -> int:
                           hlo_text))
 
 
-__all__ = ["collective_bytes", "analyze_hlo", "count_op"]
+def xla_cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalised across jax versions: older
+    jax returns a one-element list of dicts, newer jax the dict itself."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
+__all__ = ["collective_bytes", "analyze_hlo", "count_op",
+           "xla_cost_analysis"]
 
 
 # ===========================================================================

@@ -34,7 +34,7 @@ import numpy as np
 from repro.configs import get_arch
 from repro.core.dti import (PromptStats, SpecialTokens, batch_prompts,
                             build_sliding_prompts, build_streaming_prompts,
-                            window_tokens)
+                            pack_prompts, train_max_len, window_tokens)
 from repro.core.losses import ctr_loss
 from repro.core.metrics import ctr_metrics
 from repro.data.synthetic import make_ctr_dataset, split_users
@@ -80,10 +80,14 @@ def build_prompt_sets(ds, splits, *, paradigm: str, n_ctx: int, k: int,
 
 
 def make_lm_loss_fn(cfg: ModelConfig, window: int):
+    """Loss over the canonical batch schema; consumes packed rows whenever
+    the batch carries ``segment_ids`` (cross-segment isolation happens in
+    the attention mask, the [SUM] loss itself is position-local)."""
     def loss_fn(params, batch, rng):
         out = forward(params, cfg, batch["tokens"],
                       positions=batch["positions"], is_sum=batch["is_sum"],
                       valid=batch["valid"],
+                      segment_ids=batch.get("segment_ids"),
                       dti_enabled=cfg.dti_sum_token, window=window)
         loss, _ = ctr_loss(params, cfg, out["hidden"], batch["is_sum"],
                            batch["labels"], yes_id=SP.yes, no_id=SP.no)
@@ -121,14 +125,22 @@ def run_lm(args) -> Dict:
     splits = split_users(ds)
     n_tok = window_tokens(args.n_ctx, ds.avg_item_tokens)
     window = 0 if cfg.window == 0 else n_tok
-    max_len = int((args.n_ctx + (1 if args.paradigm == "sw" else args.k))
-                  * (ds.avg_item_tokens + 1.5) + 8)
-    max_len = ((max_len + 63) // 64) * 64
+    max_len = train_max_len(args.n_ctx,
+                            1 if args.paradigm == "sw" else args.k,
+                            ds.avg_item_tokens)
     train_prompts, test_prompts, test_labels, stats = build_prompt_sets(
         ds, splits, paradigm=args.paradigm, n_ctx=args.n_ctx, k=args.k,
         max_len=max_len)
     print(f"[data] {stats.n_prompts} train prompts, {stats.n_tokens} tokens, "
-          f"{stats.n_targets} targets; window={window} max_len={max_len}")
+          f"{stats.n_targets} targets; window={window} max_len={max_len} "
+          f"pad_fraction={stats.pad_fraction:.3f}")
+    if args.pack:
+        pstats = PromptStats()
+        train_prompts = pack_prompts(train_prompts, max_len, stats=pstats)
+        print(f"[pack] {pstats.n_prompts} prompts -> {pstats.n_rows} rows, "
+              f"pad_fraction {stats.pad_fraction:.3f} -> "
+              f"{pstats.pad_fraction:.3f}")
+        stats = pstats
 
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
     ocfg = OptimizerConfig(lr=args.lr, schedule="cosine",
@@ -162,6 +174,8 @@ def run_lm(args) -> Dict:
     result = {"paradigm": args.paradigm, "k": args.k,
               "train_time_s": train_time, "steps": trainer.step,
               "prompts": stats.n_prompts, "train_tokens": stats.n_tokens,
+              "packed": bool(args.pack),
+              "pad_fraction": stats.pad_fraction,
               **metrics}
     print(f"[result] {result}")
     return result
@@ -186,6 +200,8 @@ def main():
                     choices=["sw", "dti", "dti-"])
     ap.add_argument("--size", default="smoke", choices=["smoke", "full"])
     ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--pack", action="store_true",
+                    help="bin-pack prompts into shared rows (segment-aware)")
     ap.add_argument("--n-ctx", type=int, default=10, dest="n_ctx")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=8)

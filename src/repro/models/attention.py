@@ -25,6 +25,19 @@ class DTIAttnOpts:
     reset: Optional[ResetConfig] = None
     sum_alibi: bool = True                  # NoPE + ALiBi on SUM rows
     sum_isolated: bool = True
+    segment_ids: Optional[jax.Array] = None  # (B, S) int32 packed segments
+
+
+def _seg_kwargs(kw: Dict[str, Any], dti: Optional["DTIAttnOpts"],
+                cache) -> None:
+    """Thread packed-row segment ids into the attention mask operands."""
+    if dti is None or dti.segment_ids is None:
+        return
+    if cache is not None:
+        raise NotImplementedError(
+            "packed segments are a training-time feature (no decode cache)")
+    kw["seg_q"] = dti.segment_ids
+    kw["seg_k"] = dti.segment_ids
 
 
 # ---------------------------------------------------------------------------
@@ -73,6 +86,7 @@ def gqa_attention(p: Params, x: jax.Array, *, n_heads: int, n_kv_heads: int,
         if dti.reset is not None and dti.h0 is not None:
             kw["v0"] = dense(p["v"], dti.h0).reshape(b, s, n_kv_heads, head_dim)
             kw["reset"] = dti.reset
+    _seg_kwargs(kw, dti, cache)
 
     new_cache = None
     if cache is not None:
@@ -179,6 +193,7 @@ def mla_attention(p: Params, x: jax.Array, *, n_heads: int, qk_nope_dim: int,
                 positions=positions, rope_theta=rope_theta)
             kw["v0"] = v0
             kw["reset"] = dti.reset
+    _seg_kwargs(kw, dti, cache)
 
     new_cache = None
     if cache is not None:

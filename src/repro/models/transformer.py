@@ -187,12 +187,17 @@ def forward(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
             positions: Optional[jax.Array] = None,
             is_sum: Optional[jax.Array] = None,
             valid: Optional[jax.Array] = None,
+            segment_ids: Optional[jax.Array] = None,
             dti_enabled: bool = False,
             window: Optional[int] = None,
             caches: Optional[list] = None,
             return_hidden: bool = False,
             ) -> Dict[str, Any]:
     """Run the decoder. Returns dict with 'hidden', 'aux_loss', 'caches'.
+
+    ``segment_ids`` (packed rows, -1 on padding) enforce cross-segment
+    isolation in every attention layer; positions are expected to restart
+    per segment so RoPE/window/ALiBi/reset distances stay per-prompt.
 
     Logits are NOT materialised here — call ``lm_logits`` / the loss fns, so
     CTR training can touch only the two label rows of the vocab matrix.
@@ -209,11 +214,14 @@ def forward(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
     h0 = h
 
     dti: Optional[DTIAttnOpts] = None
-    if dti_enabled and is_sum is not None:
-        dti = DTIAttnOpts(is_sum=is_sum, h0=h0,
-                          reset=cfg.reset_config(win) if cfg.dti_reset else None,
+    if (dti_enabled and is_sum is not None) or segment_ids is not None:
+        use_sum = dti_enabled and is_sum is not None
+        dti = DTIAttnOpts(is_sum=is_sum if use_sum else None, h0=h0,
+                          reset=(cfg.reset_config(win)
+                                 if use_sum and cfg.dti_reset else None),
                           sum_alibi=cfg.dti_sum_alibi,
-                          sum_isolated=cfg.dti_sum_isolated)
+                          sum_isolated=cfg.dti_sum_isolated,
+                          segment_ids=segment_ids)
 
     aux_total = jnp.zeros((), jnp.float32)
     new_caches: list = []

@@ -1,0 +1,40 @@
+"""hypothesis import shim.
+
+When hypothesis is installed the real ``given``/``settings``/``st`` are
+re-exported. When it is not (the tier-1 environment carries only jax, numpy
+and pytest), the property tests are collected but skipped, and everything
+else in the importing module still runs. ``st`` is an inert object that
+accepts any attribute/call chain so strategy expressions evaluated at
+decoration time (``st.lists(st.floats(...), ...)``) never raise.
+"""
+try:
+    from hypothesis import assume, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _InertStrategy:
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _InertStrategy()
+
+    def assume(condition):
+        return True
+
+    def given(*_args, **_kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+
+__all__ = ["HAVE_HYPOTHESIS", "assume", "given", "settings", "st"]

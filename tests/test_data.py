@@ -3,7 +3,7 @@ embedding ops."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.data.recsys_gen import RecsysGenerator
 from repro.data.sampler import (make_community_graph, make_molecule_batch,

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.dti import (PromptStats, SpecialTokens, batch_prompts,
                             build_sliding_prompts, build_streaming_prompts,

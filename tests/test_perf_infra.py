@@ -54,7 +54,8 @@ class TestAnalyzeHLO:
             return out
         x = jnp.zeros((64, 64));  w = jnp.zeros((64, 64))
         c = jax.jit(f).lower(x, w).compile()
-        xla_flops = c.cost_analysis().get("flops", 0)
+        from repro.launch.hlo import xla_cost_analysis
+        xla_flops = xla_cost_analysis(c).get("flops", 0)
         assert xla_flops < 2 * 2 * 64**3          # counts ~1 iteration
 
     def test_bytes_positive_and_fusion_aware(self):
