@@ -19,8 +19,8 @@ import jax
 import numpy as np
 
 from repro.configs import get_arch
-from repro.core.dti import (PromptStats, batch_prompts, pack_prompts,
-                            train_max_len)
+from repro.core.dti import (PromptStats, batch_prompts, effective_window,
+                            pack_prompts, train_max_len)
 from repro.data.synthetic import make_ctr_dataset, split_users
 from repro.launch.train import (build_prompt_sets, evaluate_lm,
                                 make_lm_loss_fn)
@@ -73,7 +73,8 @@ def run_paradigm(setup: ReproSetup, *, paradigm: str, k: int,
                  steps: Optional[int] = None, epochs: Optional[float] = None,
                  batch: int = 8, lr: float = 1e-3, seed: int = 0,
                  fixes: Optional[Dict[str, bool]] = None,
-                 pack: bool = False) -> Dict:
+                 pack: bool = False,
+                 attn_impl: Optional[str] = None) -> Dict:
     """Train one paradigm variant end-to-end, return metrics + wall clock.
 
     ``epochs``: full passes over the paradigm's own prompt set — the paper's
@@ -84,8 +85,15 @@ def run_paradigm(setup: ReproSetup, *, paradigm: str, k: int,
     both True = DTI, both False = DTI-, ignored for paradigm='sw'.
     ``pack``: bin-pack prompts into shared segment-isolated rows; an epoch
     then takes fewer, denser rows (same supervised targets).
+    ``attn_impl``: override the config's attention path ("pallas" trains
+    through the fused kernel's custom VJP; banded paths get a finite
+    window when the setup's is 0).
     """
     cfg = setup.cfg
+    if attn_impl:
+        cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
+    window = effective_window(cfg.attn_impl, setup.window, setup.n_ctx,
+                              setup.ds.avg_item_tokens)
     fixes = fixes or {"reset": True, "pos": True}
     if paradigm == "sw":
         cfg = dataclasses.replace(cfg, dti_reset=False, dti_sum_alibi=False)
@@ -110,7 +118,7 @@ def run_paradigm(setup: ReproSetup, *, paradigm: str, k: int,
     ocfg = OptimizerConfig(lr=lr, schedule="cosine",
                            warmup_steps=max(5, steps // 10),
                            total_steps=steps)
-    loss_fn = make_lm_loss_fn(cfg, setup.window)
+    loss_fn = make_lm_loss_fn(cfg, window)
     state = init_train_state(params, ocfg)
     step_fn = make_train_step(loss_fn, ocfg)
     rng = np.random.default_rng(seed)
@@ -130,12 +138,13 @@ def run_paradigm(setup: ReproSetup, *, paradigm: str, k: int,
     jax.block_until_ready(state.params)
     train_time = time.perf_counter() - t0
 
-    metrics = evaluate_lm(state.params, cfg, setup.window, test_prompts,
+    metrics = evaluate_lm(state.params, cfg, window, test_prompts,
                           test_labels)
     # effective throughput: non-pad tokens pushed through the timed steps
     eff_tok_s = ((steps - 1) * batch * max_len * (1.0 - stats.pad_fraction)
                  / max(train_time, 1e-9))
     return {"paradigm": paradigm, "k": k, "steps": steps,
+            "attn_impl": cfg.attn_impl, "window": window,
             "train_time_s": train_time,
             "tokens": stats.n_tokens, "prompts": stats.n_prompts,
             "targets": stats.n_targets, "rows": len(train_prompts),

@@ -1,19 +1,70 @@
-"""Kernel microbenchmarks (CPU): blocked/windowed attention vs dense oracle
-cost scaling, embedding-bag substrate vs naive gather+sum.
+"""Kernel microbenchmarks (CPU): fwd AND fwd+bwd timings for the three
+attention paths, plus an eq3-style FLOPs/bytes account of the fused
+windowed kernel vs the dense counterfactual.
 
 On CPU the Pallas kernels run in interpret mode (correctness harness, not a
 perf surface), so the timing rows compare the *jnp execution shapes* the
 kernels encode: blocked-local O(S*2W) attention vs dense O(S^2) is the
-structural win the paper's windowed causal attention buys.
+structural win the paper's windowed causal attention buys. The fwd+bwd rows
+exercise the kernel's flash-style custom VJP end to end — the training
+pass is where the paper's 92% reduction lives, so the trajectory tracks
+both directions.
+
+``--json`` additionally writes a ``BENCH_kernels.json`` artifact
+(rows + the analytic account) for CI trend tracking.
 """
 from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import ROWS, emit, time_fn
 from repro.core.windowed import attention_blocked, attention_dense
+from repro.kernels.windowed_attn.ops import windowed_attention
 from repro.sparse.embedding import embedding_bag
+
+ACCOUNTS: Dict[str, Dict] = {}
+
+
+def flash_account(B: int, H: int, S: int, D: int, W: int, *,
+                  bytes_el: int = 4) -> Dict[str, float]:
+    """Analytic FLOPs / HBM-bytes model of the fused windowed kernel
+    (eq3-style: the ratio vs the dense counterfactual is the claim).
+
+    Forward: 2 banded matmuls (qk, pv) over ctx=min(W,S) keys per query.
+    Backward: 7 banded matmuls — the dq pass recomputes qk and forms
+    dp = do.v^T and dq = ds.k; the dk/dv pass recomputes qk, dp and forms
+    dv = p^T.do, dk = ds^T.q (probabilities are never stored, only the
+    (B,H,S) logsumexp + delta rows move through HBM).
+    Dense counterfactual: the same matmuls over all S keys, plus the
+    (S, S) probability tensor materialised fwd and bwd.
+    """
+    ctx = min(W, S)
+    mm = 2.0 * B * H * S * ctx * D          # one banded matmul
+    mm_dense = 2.0 * B * H * S * S * D
+    bhsd = B * H * S * D * bytes_el
+    bhs = B * H * S * bytes_el
+    acct = {
+        "B": B, "H": H, "S": S, "D": D, "W": W,
+        "flops_fwd": 2 * mm,
+        "flops_bwd": 7 * mm,
+        "flops_fwd_dense": 2 * mm_dense,
+        "flops_bwd_dense": 7 * mm_dense,
+        # fwd: read q,k,v, write o + lse residual
+        "bytes_fwd": 4 * bhsd + bhs,
+        # bwd: read q,k,v,o,do + lse,delta, write dq,dk,dv
+        "bytes_bwd": 8 * bhsd + 2 * bhs,
+        # dense materialises the (S,S) probs fwd and again in bwd
+        "bytes_probs_dense": 2.0 * B * H * S * S * bytes_el,
+        "flops_reduction": S / ctx,
+    }
+    acct["intensity_fwd"] = acct["flops_fwd"] / acct["bytes_fwd"]
+    acct["intensity_bwd"] = acct["flops_bwd"] / acct["bytes_bwd"]
+    return acct
 
 
 def attention_scaling():
@@ -32,6 +83,42 @@ def attention_scaling():
         emit(f"attn_dense_S{S}_W{W}", td, f"O(S^2) reference")
         emit(f"attn_blocked_S{S}_W{W}", tb,
              f"speedup={td / tb:.2f}x (O(S*2W))")
+        ACCOUNTS[f"S{S}_W{W}"] = flash_account(B, H, S, D, W)
+
+
+def attention_train_step():
+    """fwd+bwd (the training pass) through each attention path; the Pallas
+    rows run the real backward kernels via the custom VJP (interpret mode
+    on CPU — a correctness/coverage surface, the TPU number is the
+    roofline's job)."""
+    B, H, D, W, S, blk = 1, 2, 32, 64, 256, 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, H, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, H, D))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    kw = dict(pos_q=pos, pos_k=pos, window=W)
+    paths = {
+        "dense": lambda q, k, v: attention_dense(q, k, v, **kw),
+        "blocked": lambda q, k, v: attention_blocked(q, k, v, **kw),
+        "pallas_interp": lambda q, k, v: windowed_attention(
+            q, k, v, **kw, block_size=blk),
+    }
+    acct = flash_account(B, H, S, D, W)
+    for name, fn in paths.items():
+        fwd = jax.jit(lambda q, k, v, fn=fn: fn(q, k, v).sum())
+        bwd = jax.jit(jax.grad(lambda q, k, v, fn=fn: fn(q, k, v).sum(),
+                               argnums=(0, 1, 2)))
+        tf = time_fn(fwd, q, k, v, warmup=1, iters=3)
+        tb = time_fn(bwd, q, k, v, warmup=1, iters=3)
+        # jax.grad re-runs the forward, so tb covers fwd+bwd:
+        # model ratio = (2 + 7) banded matmuls / 2 = 4.5x the fwd
+        model_ratio = (acct["flops_fwd"] + acct["flops_bwd"]) \
+            / acct["flops_fwd"]
+        emit(f"attn_{name}_fwd_S{S}_W{W}", tf,
+             f"{acct['flops_fwd'] / tf:.0f} flop/us (banded model)")
+        emit(f"attn_{name}_fwdbwd_S{S}_W{W}", tb,
+             f"fwdbwd/fwd={tb / tf:.2f}x (model {model_ratio:.1f}x)")
+    ACCOUNTS[f"train_S{S}_W{W}"] = acct
 
 
 def embedding_bag_bench():
@@ -45,10 +132,22 @@ def embedding_bag_bench():
          f"{B * H / t:.1f} lookups/us")
 
 
-def main():
+def main(json_path: Optional[str] = None):
+    n0 = len(ROWS)
     attention_scaling()
+    attention_train_step()
     embedding_bag_bench()
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"rows": ROWS[n0:], "accounts": ACCOUNTS}, f,
+                      indent=2)
+        print(f"# wrote {json_path}")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", nargs="?", const="BENCH_kernels.json",
+                    default=None, metavar="PATH",
+                    help="also write rows + FLOPs/bytes accounts as JSON "
+                         "(default path: BENCH_kernels.json)")
+    main(ap.parse_args().json)

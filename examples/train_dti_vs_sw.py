@@ -21,23 +21,29 @@ def main():
     ap.add_argument("--epochs", type=float, default=1.0)
     ap.add_argument("--no-pack", action="store_true",
                     help="disable segment-aware prompt packing for DTI")
+    ap.add_argument("--attn-impl", default=None, dest="attn_impl",
+                    choices=["dense", "blocked", "pallas"],
+                    help="attention path for both paradigms; 'pallas' "
+                         "trains through the fused kernel's custom VJP "
+                         "(interpret mode off-TPU, no blocked fallback)")
     args = ap.parse_args()
     pack = not args.no_pack
 
     setup = ReproSetup.default()
     # pack both paradigms (or neither) so the headline reduction compares
     # SW vs DTI like-for-like, not packing vs no-packing
+    impl_note = f", attn={args.attn_impl}" if args.attn_impl else ""
     print(f"== sliding-window baseline ({args.epochs} epochs, "
-          f"{'packed' if pack else 'unpacked'}) ==")
+          f"{'packed' if pack else 'unpacked'}{impl_note}) ==")
     sw = run_paradigm(setup, paradigm="sw", k=1, epochs=args.epochs,
-                      pack=pack)
+                      pack=pack, attn_impl=args.attn_impl)
     print(f"   time {sw['train_time_s']:.1f}s  AUC {sw['auc']:.4f} "
           f"LogLoss {sw['log_loss']:.4f}  pad {sw['pad_fraction']:.1%}")
 
     print(f"== DTI k={args.k} ({args.epochs} epochs, "
-          f"{'packed' if pack else 'unpacked'}) ==")
+          f"{'packed' if pack else 'unpacked'}{impl_note}) ==")
     dti = run_paradigm(setup, paradigm="dti", k=args.k, epochs=args.epochs,
-                       pack=pack)
+                       pack=pack, attn_impl=args.attn_impl)
     print(f"   time {dti['train_time_s']:.1f}s  AUC {dti['auc']:.4f} "
           f"LogLoss {dti['log_loss']:.4f}  pad {dti['pad_fraction']:.1%}  "
           f"eff {dti['effective_tokens_per_s']:.0f} tok/s")

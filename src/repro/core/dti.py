@@ -246,6 +246,17 @@ def window_tokens(n_ctx: int, avg_item_tokens: float, cap: int = 1024) -> int:
     return int(min(cap, round(n_ctx * (avg_item_tokens + 0.5) + 2)))
 
 
+def effective_window(attn_impl: str, window: int, n_ctx: int,
+                     avg_item_tokens: float) -> int:
+    """Banded attention paths (blocked / pallas) need a finite window;
+    dense treats 0 as unlimited. One rule shared by the trainer CLI and
+    the benchmark harness so they always train with the same window."""
+    if attn_impl != "dense" and window == 0:
+        return window_tokens(n_ctx, avg_item_tokens)
+    return window
+
+
 __all__ = ["SpecialTokens", "PromptStats", "build_sliding_prompts",
            "build_streaming_prompts", "pack_prompts", "prompt_length",
-           "batch_prompts", "train_max_len", "window_tokens"]
+           "batch_prompts", "train_max_len", "window_tokens",
+           "effective_window"]

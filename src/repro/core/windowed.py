@@ -10,7 +10,12 @@ Three execution paths, all semantically identical (tests assert this):
   the Pallas kernel (`repro.kernels.windowed_attn`) implements on TPU and the
   shape used by every large dry-run cell.
 * ``repro.kernels.windowed_attn.ops.windowed_attention`` — the fused TPU
-  kernel (validated against ``attention_dense`` in interpret mode).
+  kernel (validated against ``attention_dense`` in interpret mode). It is
+  differentiable: a custom VJP pairs the forward (which saves per-row
+  logsumexp residuals) with flash-style dq and dk/dv backward kernels, so
+  ``attn_impl="pallas"`` trains end-to-end on the kernel path
+  (tests/test_kernel_grads.py asserts gradient equivalence to this dense
+  reference; docs/kernels.md documents the contract).
 
 DTI semantics implemented here (paper sections 3.3, 4.1, 4.2):
 

@@ -1,3 +1,29 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Shared kernel-package helpers.
+
+Every kernel wrapper defaults ``interpret`` the same way: compile to Mosaic
+on TPU, fall back to the Pallas interpreter elsewhere so the kernel *body*
+(not a jnp re-implementation) is what runs — and is tested — on CPU.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:  # noqa: BLE001
+        return False
+
+
+def default_interpret(interpret: Optional[bool] = None) -> bool:
+    """Resolve a tri-state ``interpret`` argument (None = auto)."""
+    return (not on_tpu()) if interpret is None else bool(interpret)
+
+
+__all__ = ["on_tpu", "default_interpret"]

@@ -6,14 +6,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import default_interpret
 from repro.kernels.embedding_bag.embedding_bag import embedding_bag_pallas
-
-
-def _on_tpu() -> bool:
-    try:
-        return jax.devices()[0].platform == "tpu"
-    except Exception:  # noqa: BLE001
-        return False
 
 
 def embedding_bag(table: jax.Array, ids: jax.Array,
@@ -22,8 +16,7 @@ def embedding_bag(table: jax.Array, ids: jax.Array,
                   weights: Optional[jax.Array] = None,
                   interpret: Optional[bool] = None) -> jax.Array:
     """ids (B, H) -> (B, D); masked, optionally weighted, sum or mean."""
-    if interpret is None:
-        interpret = not _on_tpu()
+    interpret = default_interpret(interpret)
     b, h = ids.shape
     w = jnp.ones((b, h), jnp.float32) if weights is None \
         else weights.astype(jnp.float32)

@@ -20,11 +20,17 @@ reading v0.
 All mask/positional inputs are int32 (pos) / int32 (flags) so the kernel
 has no sub-byte loads. GQA is handled by index-mapping query head h onto
 kv head h // n_rep — K/V are never repeated in memory.
+
+The forward also emits the per-row softmax logsumexp (B, H, S) — the flash
+residual the backward kernels (``windowed_attn_bwd``) use to recompute
+probabilities blockwise instead of storing them; see docs/kernels.md for
+the fwd/bwd contract.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+import math
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,11 +43,44 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerPar
 NEG_INF = -1e30
 
 
+class AttnStatics(NamedTuple):
+    """Hashable per-call configuration shared by the fwd and bwd kernels
+    (the ``nondiff`` argument of the custom_vjp in ops.py)."""
+    window: int
+    scale: float
+    block: int
+    sum_isolated: bool
+    use_seg: bool
+    use_nope: bool
+    use_reset: bool
+    y_min: float
+    y_max: float
+    midpoint: float
+    interpret: bool
+
+
+def choose_block(s: int, block_size: int) -> int:
+    """Largest block <= block_size that divides S. Falls back to
+    gcd(S, block_size) so arbitrary row lengths stay legal (correctness
+    fallback — pick 128-aligned S on real TPUs)."""
+    blk = min(block_size, s)
+    if s % blk:
+        blk = math.gcd(s, blk)
+    return blk
+
+
+def n_kv_blocks(window: int, blk: int, n_q: int) -> int:
+    """KV-band depth: how many kv blocks each q block attends (window plus
+    in-block causal tail, +1 when the window is not block-aligned)."""
+    n_kv = min(window // blk + 1, n_q) + (0 if window % blk == 0 else 1)
+    return min(max(n_kv, 1), n_q)
+
+
 def _kernel(pos_q_ref, pos_k_ref, sum_q_ref, sum_k_ref, valid_k_ref,
             seg_q_ref, seg_k_ref,
             alibi_ref,
             q_ref, k_ref, v_ref, qn_ref, kn_ref, v0_ref,
-            o_ref,
+            o_ref, lse_ref,
             m_ref, l_ref, acc_ref,
             *, blk: int, n_kv: int, window: int, scale: float,
             sum_isolated: bool, use_seg: bool, use_nope: bool,
@@ -111,6 +150,155 @@ def _kernel(pos_q_ref, pos_k_ref, sum_q_ref, sum_k_ref, valid_k_ref,
         l = l_ref[:, 0]
         safe = jnp.where(l > 0, l, 1.0)
         o_ref[0, 0, ...] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+        # flash residual: rows with no attendable key get +1e30 so the bwd
+        # recompute exp(s - lse) underflows to exactly 0 for every key
+        lse_ref[0, 0, :] = jnp.where(l > 0, m_ref[:, 0] + jnp.log(safe),
+                                     -NEG_INF)
+
+
+def prepare_inputs(
+    q: jax.Array,                 # (B, H, S, D)
+    k: jax.Array,                 # (B, Hk, S, D)
+    v: jax.Array,
+    pos_q: jax.Array,             # (B, S) int32
+    pos_k: jax.Array,
+    *,
+    window: int,
+    sum_q: Optional[jax.Array],
+    sum_k: Optional[jax.Array],
+    valid_k: Optional[jax.Array],
+    seg_q: Optional[jax.Array],
+    seg_k: Optional[jax.Array],
+    q_nope: Optional[jax.Array],
+    k_nope: Optional[jax.Array],
+    alibi: Optional[jax.Array],
+    v0: Optional[jax.Array],
+    reset: Optional[tuple],
+    sum_isolated: bool,
+    scale: Optional[float],
+    block_size: int,
+    interpret: bool,
+) -> Tuple[AttnStatics, Tuple[jax.Array, ...]]:
+    """Normalise optional operands to concrete arrays + hashable statics.
+
+    The array tuple is exactly the differentiable-argument order of the
+    custom_vjp in ops.py: (q, k, v, qn, kn, v0, alibi, pos_q, pos_k,
+    sum_q, sum_k, valid_k, seg_q, seg_k).
+    """
+    b, h, s, d = q.shape
+    blk = choose_block(s, block_size)
+    if scale is None:
+        scale = d ** -0.5
+
+    use_nope = q_nope is not None
+    use_reset = reset is not None and v0 is not None
+    use_seg = seg_q is not None and seg_k is not None
+    i32 = functools.partial(jnp.asarray, dtype=jnp.int32)
+    sum_q_i = i32(sum_q if sum_q is not None else jnp.zeros((b, s)))
+    sum_k_i = i32(sum_k if sum_k is not None else jnp.zeros((b, s)))
+    valid_i = i32(valid_k if valid_k is not None else jnp.ones((b, s)))
+    seg_q_i = i32(seg_q if use_seg else jnp.zeros((b, s)))
+    seg_k_i = i32(seg_k if use_seg else jnp.zeros((b, s)))
+    alibi_f = (alibi if alibi is not None
+               else jnp.zeros((h,))).astype(jnp.float32)
+    # value dim may differ from the qk dim (MLA: v_head_dim != qk_head)
+    zero_qk = jnp.zeros((b, 1, s, d), q.dtype)
+    qn = q_nope if use_nope else zero_qk
+    kn = k_nope if use_nope else zero_qk
+    v0_ = v0 if use_reset else jnp.zeros((b, 1, s, v.shape[-1]), q.dtype)
+    y_min, y_max, midpoint = reset if use_reset else (0.0, 0.0, 0.0)
+
+    st = AttnStatics(window=int(window), scale=float(scale), block=blk,
+                     sum_isolated=bool(sum_isolated), use_seg=use_seg,
+                     use_nope=use_nope, use_reset=use_reset,
+                     y_min=float(y_min), y_max=float(y_max),
+                     midpoint=float(midpoint), interpret=bool(interpret))
+    arrays = (q, k, v, qn, kn, v0_, alibi_f,
+              pos_q.astype(jnp.int32), pos_k.astype(jnp.int32),
+              sum_q_i, sum_k_i, valid_i, seg_q_i, seg_k_i)
+    return st, arrays
+
+
+def windowed_attention_fwd_bhsd(
+        st: AttnStatics, q, k, v, qn, kn, v0, alibi,
+        pos_q, pos_k, sum_q, sum_k, valid_k, seg_q, seg_k,
+) -> Tuple[jax.Array, jax.Array]:
+    """Normalised forward: returns (o (B,H,S,Dv), lse (B,H,S) fp32)."""
+    b, h, s, d = q.shape
+    dv = v.shape[-1]
+    hk = k.shape[1]
+    n_rep = h // hk
+    blk = st.block
+    assert s % blk == 0, f"S={s} not divisible by block {blk}"
+    n_q = s // blk
+    n_kv = n_kv_blocks(st.window, blk, n_q)
+
+    def kv_idx(bi, hi, qi, ki):
+        j = qi - (n_kv - 1) + ki
+        return (bi, hi // n_rep, jnp.maximum(j, 0), 0)
+
+    def kvh_idx(bi, hi, qi, ki):          # for arrays already (B,1,S,D)
+        j = qi - (n_kv - 1) + ki
+        return (bi, 0, jnp.maximum(j, 0), 0)
+
+    def seq_q_idx(bi, hi, qi, ki):
+        return (bi, qi)
+
+    def seq_k_idx(bi, hi, qi, ki):
+        j = qi - (n_kv - 1) + ki
+        return (bi, jnp.maximum(j, 0))
+
+    kn_map = kv_idx if st.use_nope and kn.shape[1] == hk else kvh_idx
+    qn_map = ((lambda bi, hi, qi, ki: (bi, hi, qi, 0))
+              if st.use_nope else kvh_idx)
+    v0_map = kv_idx if st.use_reset else kvh_idx
+
+    grid = (b, h, n_q, n_kv)
+    out, lse = pl.pallas_call(
+        functools.partial(
+            _kernel, blk=blk, n_kv=n_kv, window=st.window, scale=st.scale,
+            sum_isolated=st.sum_isolated, use_seg=st.use_seg,
+            use_nope=st.use_nope, use_reset=st.use_reset, y_min=st.y_min,
+            y_max=st.y_max, midpoint=st.midpoint),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk), seq_q_idx),                  # pos_q
+            pl.BlockSpec((1, blk), seq_k_idx),                  # pos_k
+            pl.BlockSpec((1, blk), seq_q_idx),                  # sum_q
+            pl.BlockSpec((1, blk), seq_k_idx),                  # sum_k
+            pl.BlockSpec((1, blk), seq_k_idx),                  # valid_k
+            pl.BlockSpec((1, blk), seq_q_idx),                  # seg_q
+            pl.BlockSpec((1, blk), seq_k_idx),                  # seg_k
+            pl.BlockSpec((1,), lambda bi, hi, qi, ki: (hi,)),   # alibi
+            pl.BlockSpec((1, 1, blk, d),
+                         lambda bi, hi, qi, ki: (bi, hi, qi, 0)),  # q
+            pl.BlockSpec((1, 1, blk, d), kv_idx),               # k
+            pl.BlockSpec((1, 1, blk, dv), kv_idx),              # v
+            pl.BlockSpec((1, 1, blk, d), qn_map),               # qn
+            pl.BlockSpec((1, 1, blk, d), kn_map),               # kn
+            pl.BlockSpec((1, 1, blk, dv), v0_map),              # v0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, blk, dv),
+                         lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, blk), lambda bi, hi, qi, ki: (bi, hi, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, s, dv), q.dtype),
+            jax.ShapeDtypeStruct((b, h, s), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((blk, 1), jnp.float32),      # m (row max)
+            pltpu.VMEM((blk, 1), jnp.float32),      # l (row denom)
+            pltpu.VMEM((blk, dv), jnp.float32),     # acc (value accum)
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=st.interpret,
+    )(pos_q, pos_k, sum_q, sum_k, valid_k, seg_q, seg_k, alibi, q, k, v,
+      qn, kn, v0)
+    return out, lse
 
 
 def windowed_attention_bhsd(
@@ -135,95 +323,19 @@ def windowed_attention_bhsd(
     scale: Optional[float] = None,
     block_size: int = 256,
     interpret: bool = False,
-) -> jax.Array:
-    b, h, s, d = q.shape
-    hk = k.shape[1]
-    n_rep = h // hk
-    blk = min(block_size, s)
-    assert s % blk == 0, f"S={s} not divisible by block {blk}"
-    if scale is None:
-        scale = d ** -0.5
-    n_q = s // blk
-    n_kv = min(window // blk + 1, n_q) + (0 if window % blk == 0 else 1)
-    n_kv = min(max(n_kv, 1), n_q)
-
-    use_nope = q_nope is not None
-    use_reset = reset is not None and v0 is not None
-    use_seg = seg_q is not None and seg_k is not None
-    i32 = functools.partial(jnp.asarray, dtype=jnp.int32)
-    sum_q_i = i32(sum_q if sum_q is not None else jnp.zeros((b, s)))
-    sum_k_i = i32(sum_k if sum_k is not None else jnp.zeros((b, s)))
-    valid_i = i32(valid_k if valid_k is not None else jnp.ones((b, s)))
-    seg_q_i = i32(seg_q if use_seg else jnp.zeros((b, s)))
-    seg_k_i = i32(seg_k if use_seg else jnp.zeros((b, s)))
-    alibi_f = (alibi if alibi is not None
-               else jnp.zeros((h,))).astype(jnp.float32)
-    zero_bh = jnp.zeros((b, 1, s, d), q.dtype)
-    qn = q_nope if use_nope else zero_bh
-    kn = k_nope if use_nope else zero_bh
-    v0_ = v0 if use_reset else zero_bh
-    y_min, y_max, midpoint = reset if use_reset else (0.0, 0.0, 0.0)
-
-    def kv_idx(bi, hi, qi, ki):
-        j = qi - (n_kv - 1) + ki
-        return (bi, hi // n_rep, jnp.maximum(j, 0), 0)
-
-    def kvh_idx(bi, hi, qi, ki):          # for arrays already (B,1,S,D)
-        j = qi - (n_kv - 1) + ki
-        return (bi, 0, jnp.maximum(j, 0), 0)
-
-    def seq_q_idx(bi, hi, qi, ki):
-        return (bi, qi)
-
-    def seq_k_idx(bi, hi, qi, ki):
-        j = qi - (n_kv - 1) + ki
-        return (bi, jnp.maximum(j, 0))
-
-    kn_map = kv_idx if use_nope and k_nope.shape[1] == hk else kvh_idx
-    qn_map = ((lambda bi, hi, qi, ki: (bi, hi, qi, 0))
-              if use_nope else kvh_idx)
-    v0_map = kv_idx if use_reset else kvh_idx
-
-    grid = (b, h, n_q, n_kv)
-    out = pl.pallas_call(
-        functools.partial(
-            _kernel, blk=blk, n_kv=n_kv, window=window, scale=scale,
-            sum_isolated=sum_isolated, use_seg=use_seg, use_nope=use_nope,
-            use_reset=use_reset, y_min=float(y_min), y_max=float(y_max),
-            midpoint=float(midpoint)),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, blk), seq_q_idx),                  # pos_q
-            pl.BlockSpec((1, blk), seq_k_idx),                  # pos_k
-            pl.BlockSpec((1, blk), seq_q_idx),                  # sum_q
-            pl.BlockSpec((1, blk), seq_k_idx),                  # sum_k
-            pl.BlockSpec((1, blk), seq_k_idx),                  # valid_k
-            pl.BlockSpec((1, blk), seq_q_idx),                  # seg_q
-            pl.BlockSpec((1, blk), seq_k_idx),                  # seg_k
-            pl.BlockSpec((1,), lambda bi, hi, qi, ki: (hi,)),   # alibi
-            pl.BlockSpec((1, 1, blk, d),
-                         lambda bi, hi, qi, ki: (bi, hi, qi, 0)),  # q
-            pl.BlockSpec((1, 1, blk, d), kv_idx),               # k
-            pl.BlockSpec((1, 1, blk, d), kv_idx),               # v
-            pl.BlockSpec((1, 1, blk, d), qn_map),               # qn
-            pl.BlockSpec((1, 1, blk, d), kn_map),               # kn
-            pl.BlockSpec((1, 1, blk, d), v0_map),               # v0
-        ],
-        out_specs=pl.BlockSpec((1, 1, blk, d),
-                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((blk, 1), jnp.float32),      # m (row max)
-            pltpu.VMEM((blk, 1), jnp.float32),      # l (row denom)
-            pltpu.VMEM((blk, d), jnp.float32),      # acc (value accum)
-        ],
-        compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel",
-                                 "arbitrary")),
-        interpret=interpret,
-    )(pos_q.astype(jnp.int32), pos_k.astype(jnp.int32), sum_q_i, sum_k_i,
-      valid_i, seg_q_i, seg_k_i, alibi_f, q, k, v, qn, kn, v0_)
-    return out
+    return_residuals: bool = False,
+):
+    """Raw forward (no VJP) — ``ops.windowed_attention`` is the trainable
+    entry point. ``return_residuals=True`` also returns the per-row lse."""
+    st, arrays = prepare_inputs(
+        q, k, v, pos_q, pos_k, window=window, sum_q=sum_q, sum_k=sum_k,
+        valid_k=valid_k, seg_q=seg_q, seg_k=seg_k, q_nope=q_nope,
+        k_nope=k_nope, alibi=alibi, v0=v0, reset=reset,
+        sum_isolated=sum_isolated, scale=scale, block_size=block_size,
+        interpret=interpret)
+    out, lse = windowed_attention_fwd_bhsd(st, *arrays)
+    return (out, lse) if return_residuals else out
 
 
-__all__ = ["windowed_attention_bhsd"]
+__all__ = ["AttnStatics", "choose_block", "n_kv_blocks", "prepare_inputs",
+           "windowed_attention_fwd_bhsd", "windowed_attention_bhsd"]

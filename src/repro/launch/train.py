@@ -34,7 +34,8 @@ import numpy as np
 from repro.configs import get_arch
 from repro.core.dti import (PromptStats, SpecialTokens, batch_prompts,
                             build_sliding_prompts, build_streaming_prompts,
-                            pack_prompts, train_max_len, window_tokens)
+                            effective_window, pack_prompts, train_max_len,
+                            window_tokens)
 from repro.core.losses import ctr_loss
 from repro.core.metrics import ctr_metrics
 from repro.data.synthetic import make_ctr_dataset, split_users
@@ -118,6 +119,8 @@ def run_lm(args) -> Dict:
         cfg = dataclasses.replace(cfg, dti_reset=False, dti_sum_alibi=False)
     elif args.paradigm == "dti-":
         cfg = dataclasses.replace(cfg, dti_reset=False, dti_sum_alibi=False)
+    if args.attn_impl:
+        cfg = dataclasses.replace(cfg, attn_impl=args.attn_impl)
 
     ds = make_ctr_dataset(n_users=args.users, n_items=args.items,
                           seq_len=args.seq, vocab_size=cfg.vocab_size,
@@ -125,6 +128,11 @@ def run_lm(args) -> Dict:
     splits = split_users(ds)
     n_tok = window_tokens(args.n_ctx, ds.avg_item_tokens)
     window = 0 if cfg.window == 0 else n_tok
+    eff = effective_window(cfg.attn_impl, window, args.n_ctx,
+                           ds.avg_item_tokens)
+    if eff != window:
+        print(f"[attn] {cfg.attn_impl} path: window 0 -> {eff} tokens")
+        window = eff
     max_len = train_max_len(args.n_ctx,
                             1 if args.paradigm == "sw" else args.k,
                             ds.avg_item_tokens)
@@ -202,6 +210,10 @@ def main():
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--pack", action="store_true",
                     help="bin-pack prompts into shared rows (segment-aware)")
+    ap.add_argument("--attn-impl", default=None, dest="attn_impl",
+                    choices=["dense", "blocked", "pallas"],
+                    help="override the config's attention path (pallas = "
+                         "fused kernel, fwd AND bwd via its custom VJP)")
     ap.add_argument("--n-ctx", type=int, default=10, dest="n_ctx")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=8)

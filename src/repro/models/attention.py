@@ -62,6 +62,7 @@ def init_gqa(rng, d_model: int, n_heads: int, n_kv_heads: int, head_dim: int,
 def gqa_attention(p: Params, x: jax.Array, *, n_heads: int, n_kv_heads: int,
                   head_dim: int, positions: jax.Array, window: int,
                   rope_theta: float, impl: str, q_chunk: int = 4,
+                  block_size: int = 256,
                   dti: Optional[DTIAttnOpts] = None,
                   cache: Optional[Dict[str, jax.Array]] = None,
                   valid: Optional[jax.Array] = None,
@@ -98,6 +99,8 @@ def gqa_attention(p: Params, x: jax.Array, *, n_heads: int, n_kv_heads: int,
     else:
         if impl == "blocked":
             kw["q_chunk"] = q_chunk
+        elif impl == "pallas":
+            kw["block_size"] = block_size
         out = attention(impl, q_rot, k_rot, v, pos_q=positions, pos_k=positions,
                         window=window, valid_k=valid, **kw)
 
@@ -168,6 +171,7 @@ def _mla_qkv(p: Params, x: jax.Array, *, n_heads: int, qk_nope_dim: int,
 def mla_attention(p: Params, x: jax.Array, *, n_heads: int, qk_nope_dim: int,
                   qk_rope_dim: int, v_head_dim: int, positions: jax.Array,
                   window: int, rope_theta: float, impl: str, q_chunk: int = 4,
+                  block_size: int = 256,
                   dti: Optional[DTIAttnOpts] = None,
                   cache: Optional[Dict[str, jax.Array]] = None,
                   valid: Optional[jax.Array] = None,
@@ -203,6 +207,8 @@ def mla_attention(p: Params, x: jax.Array, *, n_heads: int, qk_nope_dim: int,
     else:
         if impl == "blocked":
             kw["q_chunk"] = q_chunk
+        elif impl == "pallas":
+            kw["block_size"] = block_size
         out = attention(impl, q, k, v, pos_q=positions, pos_k=positions,
                         window=window, valid_k=valid, **kw)
 

@@ -59,6 +59,7 @@ class ModelConfig:
     window: int = 0                     # 0 = full causal
     attn_impl: str = "dense"            # "dense" | "blocked" | "pallas"
     attn_q_chunk: int = 4               # q-block chunking (blocked impl)
+    attn_block_size: int = 256          # pallas kernel tile (128-aligned on TPU)
     # DTI
     dti_sum_token: bool = False         # model reserves a [SUM] token
     dti_sum_alibi: bool = True
@@ -164,14 +165,16 @@ def _layer_fwd(lp: Params, h: jax.Array, cfg: ModelConfig, kind: str, *,
             lp["attn"], x, n_heads=cfg.n_heads, qk_nope_dim=cfg.qk_nope_dim,
             qk_rope_dim=cfg.qk_rope_dim, v_head_dim=cfg.v_head_dim,
             positions=positions, window=window, rope_theta=cfg.rope_theta,
-            impl=impl, q_chunk=cfg.attn_q_chunk, dti=dti, cache=cache,
+            impl=impl, q_chunk=cfg.attn_q_chunk,
+            block_size=cfg.attn_block_size, dti=dti, cache=cache,
             valid=valid)
     else:
         a, new_cache = gqa_attention(
             lp["attn"], x, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
             head_dim=cfg.hd, positions=positions, window=window,
             rope_theta=cfg.rope_theta, impl=impl, q_chunk=cfg.attn_q_chunk,
-            dti=dti, cache=cache, valid=valid)
+            block_size=cfg.attn_block_size, dti=dti, cache=cache,
+            valid=valid)
     h = h + a
     x = rmsnorm(lp["ln_ffn"], h, cfg.norm_eps)
     if kind == "moe":
