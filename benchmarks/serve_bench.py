@@ -1,0 +1,195 @@
+"""Serving throughput benchmark: per-candidate re-prefill vs shared context.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--smoke] \
+        [--json BENCH_serve.json]
+
+Three ways to score the same request stream (one user context, k candidate
+items per request), all producing the same p(click) per candidate:
+
+  * ``naive``         — the paper's inference procedure taken literally: one
+    sliding-window prompt per candidate, k prefills per request (the context
+    is re-encoded k times). Baseline.
+  * ``multi_target``  — one prefill per request over a multi-target row:
+    context segment + k isolated [SUM]-terminated candidate segments
+    (``repro.serve.engine.make_multi_target_prefill_fn``).
+  * ``scheduler``     — continuous batching with decode-side shared-context
+    KV reuse (``repro.serve.scheduler.ServeScheduler``): context prefilled
+    once into the batched cache, candidates scored as non-committing bursts.
+
+Reports requests/sec, candidates/sec, p50/p99 request latency, and the
+cache-hit token fraction (share of logical prompt tokens never recomputed),
+plus the max |score delta| of each shared mode vs naive. JSON output feeds
+the CI artifact next to BENCH_kernels.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.dti import build_sliding_prompts
+from repro.data.requests import make_request_stream
+from repro.data.synthetic import make_ctr_dataset
+from repro.models.transformer import init_params
+from repro.serve.engine import CTRServer
+from repro.serve.scheduler import ServeScheduler
+
+
+def _round64(n: int) -> int:
+    return ((n + 63) // 64) * 64
+
+
+def _summary(latencies, scores, t_total, n_requests, k, hit_fraction=0.0):
+    lat = np.asarray(latencies) * 1e3
+    return {
+        "requests_per_s": n_requests / t_total,
+        "candidates_per_s": n_requests * k / t_total,
+        "latency_p50_ms": float(np.percentile(lat, 50)),
+        "latency_p99_ms": float(np.percentile(lat, 99)),
+        "cache_hit_token_fraction": hit_fraction,
+        "total_s": t_total,
+        "scores": scores,
+    }
+
+
+def run_naive(params, cfg, requests, max_len):
+    """k sliding-window prefills per request (context re-encoded k times)."""
+    server = CTRServer(params, cfg, max_len=max_len)
+
+    def score_one(req):
+        prompts = []
+        for cand in req["candidates"]:
+            prompts += build_sliding_prompts(
+                req["context"] + [cand], [0] * (len(req["context"]) + 1),
+                n_ctx=len(req["context"]), max_len=max_len)
+        return server.score(prompts)
+
+    score_one(requests[0])                               # compile
+    lat, scores = [], []
+    t0 = time.perf_counter()
+    for req in requests:
+        t1 = time.perf_counter()
+        scores.append(score_one(req))
+        lat.append(time.perf_counter() - t1)
+    return _summary(lat, scores, time.perf_counter() - t0,
+                    len(requests), len(requests[0]["candidates"]))
+
+
+def run_multi_target(params, cfg, requests, max_len):
+    """One prefill per request: shared context + k isolated segments."""
+    server = CTRServer(params, cfg, max_len=max_len)
+
+    def score_one(req):
+        return server.score_multi_target(
+            [(req["context"], req["candidates"])])[0]
+
+    score_one(requests[0])                               # compile
+    lat, scores = [], []
+    t0 = time.perf_counter()
+    for req in requests:
+        t1 = time.perf_counter()
+        scores.append(score_one(req))
+        lat.append(time.perf_counter() - t1)
+    k = len(requests[0]["candidates"])
+    hits = logical = 0
+    for req in requests:                     # stream-wide, like the scheduler
+        ctx = 1 + sum(len(t) for t in req["context"])
+        hits += (k - 1) * ctx
+        logical += k * ctx + sum(len(c) + 1 for c in req["candidates"])
+    return _summary(lat, scores, time.perf_counter() - t0, len(requests), k,
+                    hit_fraction=hits / max(logical, 1))
+
+
+def run_scheduler(params, cfg, requests, *, n_slots, capacity, buckets):
+    """Continuous batching: shared-context cache + non-committing bursts."""
+    sched = ServeScheduler(params, cfg, n_slots=n_slots, capacity=capacity,
+                           window=cfg.window, buckets=buckets)
+    sched.submit(requests[0]["context"], requests[0]["candidates"])
+    sched.run()                                          # compile per bucket
+    t0 = time.perf_counter()
+    rids = [sched.submit(r["context"], r["candidates"]) for r in requests]
+    results = sched.run()
+    t_total = time.perf_counter() - t0
+    lat = [results[r].latency_s for r in rids]
+    scores = [results[r].scores for r in rids]
+    hits = sum(results[r].cached_tokens for r in rids)
+    logical = sum(results[r].logical_tokens for r in rids)
+    out = _summary(lat, scores, t_total, len(requests),
+                   len(requests[0]["candidates"]),
+                   hit_fraction=hits / max(logical, 1))
+    out["steps"] = sched.n_steps
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (small stream, same code path)")
+    ap.add_argument("--json", default=None, help="write results to this path")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--n-ctx", type=int, default=8, dest="n_ctx")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    n_requests = args.requests or (8 if args.smoke else 32)
+    cfg = get_arch("dti-llama").smoke
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    ds = make_ctr_dataset(n_users=16, n_items=120, seq_len=max(args.n_ctx, 12),
+                          vocab_size=cfg.vocab_size, seed=args.seed)
+    requests = make_request_stream(ds, n_requests=n_requests, k=args.k,
+                                   n_ctx=args.n_ctx, seed=args.seed)
+
+    ctx_len = max(1 + sum(len(t) for t in r["context"]) for r in requests)
+    cand_max = max(len(c) + 1 for r in requests for c in r["candidates"])
+    sw_len = _round64(ctx_len + cand_max)
+    mt_len = _round64(ctx_len + args.k * cand_max)
+    buckets = (16, 32, 64)
+    capacity = ctx_len + max(buckets)
+
+    print(f"[serve_bench] {n_requests} requests, k={args.k}, "
+          f"ctx<={ctx_len} tok, candidate burst<={cand_max} tok")
+    modes = {
+        "naive": run_naive(params, cfg, requests, sw_len),
+        "multi_target": run_multi_target(params, cfg, requests, mt_len),
+        "scheduler": run_scheduler(params, cfg, requests, n_slots=args.slots,
+                                   capacity=capacity, buckets=buckets),
+    }
+
+    ref = np.asarray(modes["naive"].pop("scores"))
+    deltas = {}
+    for name in ("multi_target", "scheduler"):
+        sc = np.asarray(modes[name].pop("scores"))
+        deltas[name] = float(np.max(np.abs(sc - ref)))
+    for name, m in modes.items():
+        print(f"  {name:13s} {m['candidates_per_s']:8.1f} cand/s  "
+              f"{m['requests_per_s']:6.1f} req/s  "
+              f"p50 {m['latency_p50_ms']:7.1f} ms  "
+              f"p99 {m['latency_p99_ms']:7.1f} ms  "
+              f"cache-hit {m['cache_hit_token_fraction']:.2f}")
+    print(f"  max |p - naive|: {deltas}")
+
+    result = {
+        "config": {"arch": cfg.name, "n_requests": n_requests, "k": args.k,
+                   "n_ctx": args.n_ctx, "slots": args.slots,
+                   "smoke": bool(args.smoke)},
+        "modes": modes,
+        "score_max_abs_delta_vs_naive": deltas,
+        "speedup_candidates_per_s": {
+            name: modes[name]["candidates_per_s"]
+            / modes["naive"]["candidates_per_s"]
+            for name in ("multi_target", "scheduler")},
+    }
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"[serve_bench] wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

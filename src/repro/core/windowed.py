@@ -63,16 +63,24 @@ def dti_mask(pos_q: jax.Array, pos_k: jax.Array, *, window: int,
              is_sum_k: Optional[jax.Array] = None,
              valid_k: Optional[jax.Array] = None,
              seg_q: Optional[jax.Array] = None,
-             seg_k: Optional[jax.Array] = None) -> jax.Array:
+             seg_k: Optional[jax.Array] = None,
+             seg_shared: Optional[int] = None) -> jax.Array:
     """Boolean (..., Sq, Sk) mask: True = attendable.
 
-    causal  : pos_q >= pos_k
-    window  : pos_q - pos_k <= window (window == 0 -> unlimited, pure causal)
-    SUM-iso : keys that are [SUM] tokens only attend-able by themselves
-    valid_k : padding mask for keys
-    segment : packed rows — queries only attend keys of their own segment
-              (positions restart per segment, so without this term a later
-              segment's small pos_q would alias into earlier segments)
+    causal     : pos_q >= pos_k
+    window     : pos_q - pos_k <= window (window == 0 -> unlimited, pure causal)
+    SUM-iso    : keys that are [SUM] tokens only attend-able by themselves
+    valid_k    : padding mask for keys
+    segment    : packed rows — queries only attend keys of their own segment
+                 (positions restart per segment, so without this term a later
+                 segment's small pos_q would alias into earlier segments)
+    seg_shared : multi-target serving rows — keys of segment ``seg_shared``
+                 (the user context) are additionally attendable by *every*
+                 segment, so k candidate segments share one context prefix
+                 while staying isolated from each other. Candidate positions
+                 continue after the context (they do not restart at 0), so
+                 the causal/window/ALiBi distances equal the ones of a
+                 standalone context+candidate prompt.
     """
     d = pos_q[..., :, None] - pos_k[..., None, :]
     m = d >= 0
@@ -83,7 +91,10 @@ def dti_mask(pos_q: jax.Array, pos_k: jax.Array, *, window: int,
     if valid_k is not None:
         m = m & valid_k[..., None, :]
     if seg_q is not None and seg_k is not None:
-        m = m & (seg_q[..., :, None] == seg_k[..., None, :])
+        same = seg_q[..., :, None] == seg_k[..., None, :]
+        if seg_shared is not None:
+            same = same | (seg_k[..., None, :] == seg_shared)
+        m = m & same
     return m
 
 
@@ -113,6 +124,7 @@ def attention_dense(
     valid_k: Optional[jax.Array] = None,    # (B, Sk) bool
     seg_q: Optional[jax.Array] = None,      # (B, Sq) int32 packed segments
     seg_k: Optional[jax.Array] = None,      # (B, Sk) int32
+    seg_shared: Optional[int] = None,       # shared-prefix segment id
     q_nope: Optional[jax.Array] = None,     # unrotated q for SUM rows
     k_nope: Optional[jax.Array] = None,     # unrotated k for SUM rows
     alibi: Optional[jax.Array] = None,      # (H,) slopes for SUM rows
@@ -144,7 +156,8 @@ def attention_dense(
 
     mask = dti_mask(pos_q, pos_k, window=window,
                     is_sum_k=is_sum_k if sum_isolated else None,
-                    valid_k=valid_k, seg_q=seg_q, seg_k=seg_k)  # (B,Sq,Sk)
+                    valid_k=valid_k, seg_q=seg_q, seg_k=seg_k,
+                    seg_shared=seg_shared)                      # (B,Sq,Sk)
     logits = jnp.where(mask[:, None, :, :], logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1)
     # rows with no attendable key (padding) -> zero output
@@ -306,6 +319,14 @@ def attention_blocked(
 
 
 def attention(impl: str, *args, **kwargs) -> jax.Array:
+    if impl != "dense" and kwargs.pop("seg_shared", None) is not None:
+        # Multi-target serving rows interleave candidate segments whose
+        # positions all continue from the context, so physical distance !=
+        # positional distance — the block-pair schedule the banded paths
+        # rely on does not hold.
+        raise NotImplementedError(
+            "shared-prefix segments (multi-target serving) require the "
+            "dense attention path")
     if impl == "dense":
         return attention_dense(*args, **kwargs)
     if impl == "blocked":

@@ -1,0 +1,45 @@
+"""Synthetic serving request streams (one user context + k candidate items).
+
+The request shape end-to-end LLM rankers serve: per page view, one user's
+recent interaction history and a slate of k candidate items to score. Built
+on the same latent-factor corpus as training (`repro.data.synthetic`), so
+scheduler/benchmark runs exercise realistic token-length distributions:
+context interactions carry their rating token, candidates are unrated
+(their click is what serving predicts).
+
+Consumed by ``repro.serve.scheduler.ServeScheduler.submit``,
+``CTRServer.score_multi_target`` and ``benchmarks/serve_bench.py``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.data.synthetic import CTRDataset
+
+
+def make_request_stream(ds: CTRDataset, *, n_requests: int, k: int,
+                        n_ctx: int, seed: int = 0) -> List[Dict]:
+    """Draw ``n_requests`` requests: a random user's ``n_ctx`` consecutive
+    interactions (with rating tokens) as context, and ``k`` random items
+    (without ratings) as the candidate slate. Returns dicts with ``context``
+    and ``candidates``, each a list of per-item token lists."""
+    rng = np.random.default_rng(seed)
+    out = []
+    n_items = len(ds.item_tokens)
+    for _ in range(n_requests):
+        u = int(rng.integers(0, len(ds.sequences)))
+        toks, _ = ds.user_prompt_material(u)
+        assert len(toks) >= n_ctx, f"user history {len(toks)} < n_ctx {n_ctx}"
+        lo = int(rng.integers(0, len(toks) - n_ctx + 1))
+        cands = rng.integers(0, n_items, size=k)
+        out.append({
+            "user": u,
+            "context": toks[lo: lo + n_ctx],
+            "candidates": [list(ds.item_tokens[i]) for i in cands],
+        })
+    return out
+
+
+__all__ = ["make_request_stream"]

@@ -11,6 +11,12 @@ synthetic MovieLens-like corpus with either training paradigm:
     causal attention, [SUM] loss, hidden-state reset, SUM NoPE+ALiBi)
   * ``--paradigm dti-`` — DTI without the two bottleneck fixes (ablation)
 
+``--pack`` bin-packs prompts into shared segment-isolated rows (fewer,
+denser rows per epoch; docs/batch_schema.md). ``--attn-impl pallas``
+trains through the fused windowed-attention kernel's custom VJP
+(docs/kernels.md); banded impls get a finite window automatically when
+the config's is 0 (``effective_window``).
+
 Non-LM archs (--arch gin-tu / din / ...) train their smoke config on the
 matching synthetic generator — every assigned architecture is runnable
 end-to-end from this one driver.

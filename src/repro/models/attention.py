@@ -26,18 +26,26 @@ class DTIAttnOpts:
     sum_alibi: bool = True                  # NoPE + ALiBi on SUM rows
     sum_isolated: bool = True
     segment_ids: Optional[jax.Array] = None  # (B, S) int32 packed segments
+    seg_shared: Optional[int] = None        # shared-prefix segment id
+                                            # (multi-target serving rows)
 
 
 def _seg_kwargs(kw: Dict[str, Any], dti: Optional["DTIAttnOpts"],
                 cache) -> None:
     """Thread packed-row segment ids into the attention mask operands."""
-    if dti is None or dti.segment_ids is None:
+    if dti is None:
+        return
+    if dti.segment_ids is None:
+        assert dti.seg_shared is None, (
+            "seg_shared (shared-prefix rows) requires segment_ids")
         return
     if cache is not None:
         raise NotImplementedError(
-            "packed segments are a training-time feature (no decode cache)")
+            "packed segments are a prefill-side feature (no decode cache)")
     kw["seg_q"] = dti.segment_ids
     kw["seg_k"] = dti.segment_ids
+    if dti.seg_shared is not None:
+        kw["seg_shared"] = dti.seg_shared
 
 
 # ---------------------------------------------------------------------------

@@ -191,6 +191,7 @@ def forward(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
             is_sum: Optional[jax.Array] = None,
             valid: Optional[jax.Array] = None,
             segment_ids: Optional[jax.Array] = None,
+            seg_shared: Optional[int] = None,
             dti_enabled: bool = False,
             window: Optional[int] = None,
             caches: Optional[list] = None,
@@ -201,6 +202,11 @@ def forward(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
     ``segment_ids`` (packed rows, -1 on padding) enforce cross-segment
     isolation in every attention layer; positions are expected to restart
     per segment so RoPE/window/ALiBi/reset distances stay per-prompt.
+
+    ``seg_shared`` marks one segment id (the user context of a multi-target
+    serving row) as a shared prefix every other segment may attend;
+    candidate segments keep positions continuing after the context instead
+    of restarting. Dense attention path only.
 
     Logits are NOT materialised here — call ``lm_logits`` / the loss fns, so
     CTR training can touch only the two label rows of the vocab matrix.
@@ -224,7 +230,7 @@ def forward(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
                                  if use_sum and cfg.dti_reset else None),
                           sum_alibi=cfg.dti_sum_alibi,
                           sum_isolated=cfg.dti_sum_isolated,
-                          segment_ids=segment_ids)
+                          segment_ids=segment_ids, seg_shared=seg_shared)
 
     aux_total = jnp.zeros((), jnp.float32)
     new_caches: list = []

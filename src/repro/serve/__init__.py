@@ -1,3 +1,7 @@
-"""repro.serve — prefill/decode serving engine with windowed ring caches."""
-from repro.serve.cache import Cache, cache_shape, init_lm_cache, slot_indices
-from repro.serve.engine import CTRServer, make_decode_fn, make_prefill_fn
+"""repro.serve — serving: prefill + decode engine, GQA/MLA/ring KV caches,
+multi-target scoring and the continuous-batching scheduler (docs/serving.md)."""
+from repro.serve.cache import (Cache, cache_shape, free_slots, init_lm_cache,
+                               slot_indices)
+from repro.serve.engine import (CTRServer, make_decode_fn,
+                                make_multi_target_prefill_fn, make_prefill_fn)
+from repro.serve.scheduler import RequestResult, ServeScheduler

@@ -62,4 +62,17 @@ def slot_indices(cache: Cache, s_new: int, *, ring: bool):
     return idx % cap if ring else idx
 
 
-__all__ = ["Cache", "init_lm_cache", "cache_shape", "slot_indices"]
+def free_slots(cache: Cache, mask) -> Cache:
+    """Reset the batch rows selected by ``mask`` (B,) bool: position buffer
+    to -1 (nothing attendable), cursor to 0. KV bytes are left in place —
+    pos -1 already makes them unreachable and the next occupant overwrites
+    them — so eviction/admission is O(B·cap) int32 work, no KV traffic.
+    Used by the continuous-batching scheduler when a request completes and
+    its slot is re-admitted."""
+    pos = jnp.where(mask[:, None], -1, cache["pos"])
+    cursor = jnp.where(mask, 0, cache["cursor"])
+    return dict(cache, pos=pos, cursor=cursor)
+
+
+__all__ = ["Cache", "init_lm_cache", "cache_shape", "slot_indices",
+           "free_slots"]

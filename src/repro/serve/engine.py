@@ -19,6 +19,17 @@ execution paths:
 
 ``lax.scan`` over (stacked layer params, stacked cache layers) keeps the
 lowered HLO O(1) in depth for the 512-device dry-run compiles.
+
+Beyond the paper's one-prompt-per-candidate procedure, two shared-context
+paths score a whole candidate slate against one user context (the serving
+analog of the training paradigm; docs/serving.md):
+
+* ``make_multi_target_prefill_fn`` — one prefill over a
+  context-segment + k-isolated-candidate-segments row
+  (``repro.core.dti.build_multi_target_request``);
+* ``make_decode_fn``'s ``valid``/``commit``/``seg`` operands — chunked
+  context prefill into the cache once, then non-committing segment-isolated
+  candidate bursts against it (driven by ``repro.serve.scheduler``).
 """
 from __future__ import annotations
 
@@ -44,20 +55,52 @@ Params = Dict[str, Any]
 # ===========================================================================
 
 def make_prefill_fn(cfg: ModelConfig, *, yes_id: int = 3, no_id: int = 4,
-                    window: Optional[int] = None) -> Callable:
-    """(params, batch) -> p_click (B, S); valid only at [SUM] positions."""
+                    window: Optional[int] = None,
+                    multi_target: bool = False) -> Callable:
+    """(params, batch) -> p_click (B, S); valid only at [SUM] positions.
+
+    ``multi_target=True`` scores shared-context rows instead of one-prompt
+    rows: the batch must carry ``segment_ids`` and segment 0 is treated as
+    a shared prefix (``seg_shared=0``); forces the dense attention path.
+    """
 
     def prefill(params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
         # inference-time DTI: SUM NoPE+ALiBi + isolation, no reset
         icfg = dataclasses.replace(cfg, dti_reset=False)
+        kw: Dict[str, Any] = {}
+        if multi_target:
+            icfg = dataclasses.replace(icfg, attn_impl="dense")
+            kw = dict(segment_ids=batch["segment_ids"], seg_shared=0)
         out = forward(params, icfg, batch["tokens"],
                       positions=batch["positions"], is_sum=batch["is_sum"],
-                      valid=batch["valid"], dti_enabled=True, window=window)
+                      valid=batch["valid"], dti_enabled=True, window=window,
+                      **kw)
         logits2 = ctr_logits(params, cfg, out["hidden"], yes_id, no_id)
         p = jax.nn.softmax(logits2.astype(jnp.float32), axis=-1)[..., 0]
         return jnp.where(batch["is_sum"], p, 0.0)
 
     return prefill
+
+
+def make_multi_target_prefill_fn(cfg: ModelConfig, *, yes_id: int = 3,
+                                 no_id: int = 4,
+                                 window: Optional[int] = None) -> Callable:
+    """(params, batch) -> p_click (B, S) for multi-target serving rows.
+
+    ``batch`` rows come from ``repro.core.dti.build_multi_target_request``:
+    one shared user context (segment 0) plus k [SUM]-terminated candidate
+    segments whose positions continue after the context. Segment 0 is a
+    shared prefix (``seg_shared=0``), so one prefill scores all k candidates
+    with the context encoded once — O(n^2 + k·n) attention instead of the
+    O(k·n^2) of k independent sliding-window prefills — and each [SUM]
+    probability equals the standalone-prompt score exactly.
+
+    Forces the dense attention path: the banded/Pallas schedules assume
+    physical distance == positional distance, which the interleaved
+    candidate segments break.
+    """
+    return make_prefill_fn(cfg, yes_id=yes_id, no_id=no_id, window=window,
+                           multi_target=True)
 
 
 # ===========================================================================
@@ -68,6 +111,25 @@ def _rope_read(k: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
     """Rope cached (unroped) keys with their stored positions; slots with
     pos < 0 are masked later, rope them at 0."""
     return apply_rope(k, jnp.maximum(pos, 0), theta)
+
+
+def _decode_mask(pos_buf, positions, window: int, seg_q=None, seg_buf=None):
+    """(B, s, cap) attendability: filled slot, causal, and — matching
+    ``dti_mask`` — the window term only when window > 0 (0 = pure causal).
+
+    ``seg_q``/``seg_buf`` implement multi-candidate bursts: committed cache
+    entries (the shared user context) carry segment -1 and are attendable by
+    everyone; in-flight burst tokens carry their candidate index and only
+    attend context + their own candidate — k candidates score in one step
+    without seeing each other."""
+    m = ((pos_buf[:, None, :] >= 0)
+         & (positions[:, :, None] >= pos_buf[:, None, :]))
+    if window > 0:
+        m = m & ((positions[:, :, None] - pos_buf[:, None, :]) <= window)
+    if seg_q is not None:
+        m = m & ((seg_buf[:, None, :] < 0)
+                 | (seg_buf[:, None, :] == seg_q[:, :, None]))
+    return m
 
 
 def _decode_attend(scores_rope, scores_nope, alibi, d, mask, is_sum_q, v_agg):
@@ -84,7 +146,8 @@ def _decode_attend(scores_rope, scores_nope, alibi, d, mask, is_sum_q, v_agg):
 
 
 def _gqa_decode_layer(lp: Params, h, kc, vc, *, cfg: ModelConfig, slots,
-                      pos_buf, positions, is_sum, window, kind):
+                      pos_buf, positions, is_sum, window, kind,
+                      seg_q=None, seg_buf=None):
     b, s, _ = h.shape
     hq, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     n_rep = hq // hk
@@ -94,8 +157,10 @@ def _gqa_decode_layer(lp: Params, h, kc, vc, *, cfg: ModelConfig, slots,
     v_new = dense(lp["attn"]["v"], x).reshape(b, s, hk, hd)
 
     bidx = jnp.arange(b)[:, None]
-    kc = kc.at[bidx, slots].set(k_new.astype(kc.dtype))      # unroped keys
-    vc = vc.at[bidx, slots].set(v_new.astype(vc.dtype))
+    # mode="drop": padded-to-bucket chunks may point past capacity; those
+    # writes must vanish, not clamp onto the last slot (see decode docstring)
+    kc = kc.at[bidx, slots].set(k_new.astype(kc.dtype), mode="drop")
+    vc = vc.at[bidx, slots].set(v_new.astype(vc.dtype), mode="drop")
 
     q_rope = apply_rope(q, positions, cfg.rope_theta)
     k_rope = _rope_read(kc, pos_buf, cfg.rope_theta)
@@ -117,9 +182,7 @@ def _gqa_decode_layer(lp: Params, h, kc, vc, *, cfg: ModelConfig, slots,
 
     d = (positions[:, None, :, None] - pos_buf[:, None, None, :]
          ).astype(jnp.float32)
-    mask = ((pos_buf[:, None, :] >= 0)
-            & (positions[:, :, None] >= pos_buf[:, None, :])
-            & ((positions[:, :, None] - pos_buf[:, None, :]) <= window))
+    mask = _decode_mask(pos_buf, positions, window, seg_q, seg_buf)
     out = _decode_attend(sc_rope, sc_nope, alibi_slopes(hq), d, mask, is_sum,
                          lambda p: jnp.einsum("bhsk,bkhd->bshd",
                                               p.astype(h.dtype), rep(vc)))
@@ -129,7 +192,8 @@ def _gqa_decode_layer(lp: Params, h, kc, vc, *, cfg: ModelConfig, slots,
 
 
 def _mla_decode_layer(lp: Params, h, ckv_c, kpe_c, *, cfg: ModelConfig,
-                      slots, pos_buf, positions, is_sum, window, kind):
+                      slots, pos_buf, positions, is_sum, window, kind,
+                      seg_q=None, seg_buf=None):
     """Absorbed-MLA decode: scores and values against the latent cache."""
     b, s, _ = h.shape
     hq = cfg.n_heads
@@ -150,8 +214,9 @@ def _mla_decode_layer(lp: Params, h, ckv_c, kpe_c, *, cfg: ModelConfig,
     kpe_new = dense(ap["k_rope"], x)                                # (B,s,dr)
 
     bidx = jnp.arange(b)[:, None]
-    ckv_c = ckv_c.at[bidx, slots].set(c_new.astype(ckv_c.dtype))
-    kpe_c = kpe_c.at[bidx, slots].set(kpe_new.astype(kpe_c.dtype))
+    ckv_c = ckv_c.at[bidx, slots].set(c_new.astype(ckv_c.dtype), mode="drop")
+    kpe_c = kpe_c.at[bidx, slots].set(kpe_new.astype(kpe_c.dtype),
+                                      mode="drop")
 
     # absorb W_UK into the query, W_UV into the output
     w_up = ap["kv_up"]["w"].reshape(cfg.kv_lora_rank, hq, dn + dv)
@@ -174,9 +239,7 @@ def _mla_decode_layer(lp: Params, h, ckv_c, kpe_c, *, cfg: ModelConfig,
 
     d = (positions[:, None, :, None] - pos_buf[:, None, None, :]
          ).astype(jnp.float32)
-    mask = ((pos_buf[:, None, :] >= 0)
-            & (positions[:, :, None] >= pos_buf[:, None, :])
-            & ((positions[:, :, None] - pos_buf[:, None, :]) <= window))
+    mask = _decode_mask(pos_buf, positions, window, seg_q, seg_buf)
 
     def v_agg(p):
         o_lat = jnp.einsum("bhsk,bkr->bshr", p.astype(h.dtype), ckv_c)
@@ -203,21 +266,66 @@ def _ffn(lp: Params, h, cfg: ModelConfig, kind: str):
 
 def make_decode_fn(cfg: ModelConfig, *, window: int, ring: bool,
                    yes_id: int = 3, no_id: int = 4) -> Callable:
-    """(params, cache, tokens (B,s), positions (B,s), is_sum (B,s))
-    -> (p_click (B, s), new_cache)."""
+    """(params, cache, tokens (B,s), positions (B,s), is_sum (B,s)[,
+    valid (B,s), commit (B,), seg (B,s)]) -> (p_click (B, s), new_cache).
+
+    The three optional operands are what the continuous-batching scheduler
+    (repro.serve.scheduler) runs on:
+
+    * ``valid``  — right-padded chunks: invalid slots are written with
+      position -1 (never attendable) and the per-row cursor advances by the
+      number of *valid* tokens only, so rows of different real lengths share
+      one padded-to-bucket jit shape.
+    * ``commit`` — per-row bool. A row with ``commit=False`` is a *scoring
+      burst*: its tokens attend the row's committed cache (the shared user
+      context) plus themselves, but the returned cache keeps the row's
+      ``pos``/``cursor`` unchanged, so the next burst sees the pristine
+      context again — candidate k+1 never reads candidate k's KV. This is
+      the decode-side shared-context reuse; it requires ``ring=False``
+      (a wrapped burst write would orphan old positions onto burst KV).
+    * ``seg``    — per-token segment for multi-candidate bursts: -1 = shared
+      (context chunks), 0..k-1 = candidate index. Committed cache entries
+      are shared by construction; burst tokens attend context + their own
+      segment only, so one burst step scores a whole candidate slate — the
+      decode-side analog of the training paradigm's k isolated targets.
+    """
     mla = cfg.attn_type == "mla"
     keys = ("ckv", "kpe") if mla else ("k", "v")
     layer_fn = _mla_decode_layer if mla else _gqa_decode_layer
 
     def decode(params: Params, cache: Cache, tokens: jax.Array,
-               positions: jax.Array, is_sum: jax.Array
+               positions: jax.Array, is_sum: jax.Array,
+               valid: Optional[jax.Array] = None,
+               commit: Optional[jax.Array] = None,
+               seg: Optional[jax.Array] = None,
                ) -> Tuple[jax.Array, Cache]:
         b, s = tokens.shape
         slots = slot_indices(cache, s, ring=ring)
         bidx = jnp.arange(b)[:, None]
-        pos_buf = cache["pos"].at[bidx, slots].set(positions)
-        new_cache = dict(cache, pos=pos_buf,
-                         cursor=cache["cursor"] + s)
+        pos_write = (positions if valid is None
+                     else jnp.where(valid, positions, -1))
+        # mode="drop": a chunk right-padded to its bucket may index past
+        # capacity when a row's cursor sits near the top; dropping those
+        # writes (instead of XLA's default clamp onto the last slot) keeps
+        # the scheduler's "real tokens always fit" invariant sufficient.
+        pos_buf = cache["pos"].at[bidx, slots].set(pos_write, mode="drop")
+        seg_buf = None
+        if seg is not None:
+            cap = cache["pos"].shape[1]
+            seg_buf = jnp.full((b, cap), -1, jnp.int32).at[bidx, slots].set(
+                seg, mode="drop")
+        n_new = (s if valid is None
+                 else valid.sum(axis=-1).astype(jnp.int32))
+        if commit is None:
+            new_cache = dict(cache, pos=pos_buf,
+                             cursor=cache["cursor"] + n_new)
+        else:
+            assert not ring, "non-committing bursts require ring=False"
+            new_cache = dict(
+                cache,
+                pos=jnp.where(commit[:, None], pos_buf, cache["pos"]),
+                cursor=jnp.where(commit, cache["cursor"] + n_new,
+                                 cache["cursor"]))
 
         h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.cdtype)
 
@@ -240,7 +348,7 @@ def make_decode_fn(cfg: ModelConfig, *, window: int, ring: bool,
                 hh, ca, cb, aux = layer_fn(
                     lp, hc, ca, cb, cfg=cfg, slots=slots, pos_buf=pos_buf,
                     positions=positions, is_sum=is_sum, window=window,
-                    kind=kind)
+                    kind=kind, seg_q=seg, seg_buf=seg_buf)
                 ca_full = jax.lax.dynamic_update_index_in_dim(
                     ca_full, ca.astype(ca_full.dtype), li, 0)
                 cb_full = jax.lax.dynamic_update_index_in_dim(
@@ -275,10 +383,22 @@ def make_decode_fn(cfg: ModelConfig, *, window: int, ring: bool,
 
 @dataclasses.dataclass
 class CTRServer:
-    """Batched pointwise CTR scorer over sliding-window prompts.
+    """Batched pointwise CTR scorer over prefill rows.
 
-    Pads requests to a fixed (batch, seq) grid, scores the [SUM] position of
-    each, returns p(click). One jitted prefill per (batch, seq) bucket.
+    Two entry points, both scoring a stacked batch of ``max_len``-padded
+    rows in one jitted prefill call:
+
+    * ``score``              — one sliding-window prompt per candidate (the
+      paper's inference procedure; re-encodes the context per candidate).
+    * ``score_multi_target`` — one multi-target row per *request* (shared
+      context + k isolated candidate segments); the context is encoded once
+      per request. Same scores, O(n^2 + k·n) instead of O(k·n^2).
+
+    The seq dim is fixed (``max_len``) but the batch dim is whatever the
+    caller passes — each distinct batch size jit-compiles once, so feed
+    fixed-size groups in steady state. For sustained traffic with
+    admission/eviction, bucketed shapes and decode-side context KV reuse,
+    use ``repro.serve.scheduler.ServeScheduler`` instead.
     """
     params: Params
     cfg: ModelConfig
@@ -288,6 +408,8 @@ class CTRServer:
 
     def __post_init__(self):
         self._prefill = jax.jit(make_prefill_fn(
+            self.cfg, yes_id=self.yes_id, no_id=self.no_id))
+        self._mt_prefill = jax.jit(make_multi_target_prefill_fn(
             self.cfg, yes_id=self.yes_id, no_id=self.no_id))
 
     def score(self, prompts) -> "list[float]":
@@ -302,5 +424,21 @@ class CTRServer:
             out.append(float(p[i, sums[-1]]) if len(sums) else 0.5)
         return out
 
+    def score_multi_target(self, requests) -> "list[list[float]]":
+        """``requests``: (context_tokens, candidate_tokens) pairs, each a
+        list of per-interaction / per-candidate token lists. Returns the k
+        candidate scores per request, in candidate order."""
+        import numpy as np
+        from repro.core.dti import (build_multi_target_request,
+                                    candidate_sum_slots)
+        rows = [build_multi_target_request(ctx, cands, max_len=self.max_len)
+                for ctx, cands in requests]
+        batch = {k: np.stack([r[k] for r in rows]) for k in
+                 ("tokens", "positions", "segment_ids", "is_sum", "valid")}
+        p = np.asarray(self._mt_prefill(self.params, batch))
+        return [[float(p[i, s]) for s in candidate_sum_slots(rows[i])]
+                for i in range(len(rows))]
 
-__all__ = ["make_prefill_fn", "make_decode_fn", "CTRServer"]
+
+__all__ = ["make_prefill_fn", "make_multi_target_prefill_fn",
+           "make_decode_fn", "CTRServer"]

@@ -1,0 +1,269 @@
+"""Continuous-batching CTR serving with shared-context KV reuse.
+
+The paper's training trick — isolate k targets against one shared context
+instead of re-encoding the context k times — applied at inference. A request
+is one user context plus k candidate items; the end-to-end LLM-ranker
+deployment shape (one user, many candidates per page view). Per request the
+scheduler:
+
+  1. prefills the context once into the request's cache rows (chunked,
+     committed decode steps — decode == prefill, see tests/test_serve.py);
+  2. scores candidates as *non-committing bursts*: a burst attends the
+     cached context plus itself, reads p(click) at each [SUM] slot, and
+     leaves the cache's pos/cursor untouched — the next burst sees the
+     pristine context again. As many candidates as fit the largest bucket
+     ride one burst, isolated from each other by in-burst segment ids
+     (the decode-side analog of the training paradigm's k isolated
+     targets), so a whole slate usually costs one decode step.
+
+Continuous batching: a fixed-capacity batched cache (``n_slots`` rows x
+``capacity`` token slots); requests are admitted into free rows as they
+arrive and evicted the moment their last candidate is scored, so short
+requests never wait for long ones. Every step feeds one work unit per busy
+row, right-padded to a fixed bucket length — the jitted decode step only
+ever sees ``len(buckets)`` shapes, so steady-state serving never recompiles.
+
+Cost: per request O(n^2 + k·n·s) attention reads instead of the O(k·n^2) of
+re-prefilling the context per candidate; ``RequestResult.cached_tokens``
+tracks the prompt tokens served from the shared cache instead of recomputed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dti import SpecialTokens
+from repro.models.transformer import ModelConfig
+from repro.serve.cache import free_slots, init_lm_cache
+from repro.serve.engine import make_decode_fn
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    scores: List[float]                # p(click) per candidate, in order
+    latency_s: float                   # submit -> last candidate scored
+    context_tokens: int                # tokens prefilled once (incl. BOS)
+    burst_tokens: int                  # candidate+[SUM] tokens scored
+    cached_tokens: int                 # context re-encodes avoided: (k-1)*n
+    logical_tokens: int                # what k independent prefills compute
+
+    @property
+    def cache_hit_fraction(self) -> float:
+        """Fraction of the logical prompt tokens (k x context+candidate)
+        that were read from the shared-context cache instead of recomputed."""
+        return self.cached_tokens / max(self.logical_tokens, 1)
+
+
+@dataclasses.dataclass
+class _Unit:
+    """One fixed-shape step's worth of work for one slot."""
+    tokens: np.ndarray                 # (n,) int32
+    positions: np.ndarray              # (n,) int32
+    is_sum: np.ndarray                 # (n,) bool
+    seg: np.ndarray                    # (n,) int32; -1 shared, else candidate
+    commit: bool                       # context chunk (True) vs burst (False)
+    score_at: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
+                                       # (candidate idx, offset) per [SUM]
+
+
+@dataclasses.dataclass
+class _Slot:
+    rid: int
+    units: deque
+    scores: List[Optional[float]]
+    submit_t: float
+    context_tokens: int
+    burst_tokens: int
+    n_candidates: int
+
+
+class ServeScheduler:
+    """Continuous-batching multi-target CTR scorer.
+
+    ``submit`` enqueues a request (context = per-interaction token lists,
+    candidates = per-candidate token lists); ``run`` drains queue and slots
+    and returns {rid: RequestResult}. ``step`` advances one batched decode
+    step (exposed for tests). The decode step is jitted once per bucket
+    length; admission/eviction are O(rows) host bookkeeping plus an int32
+    pos/cursor reset on the freed rows.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 8,
+                 capacity: int = 256, window: Optional[int] = None,
+                 buckets: Sequence[int] = (8, 16, 32, 64),
+                 sp: SpecialTokens = SpecialTokens(),
+                 yes_id: int = 3, no_id: int = 4, cache_dtype=jnp.float32):
+        if window is None:
+            window = cfg.window          # match make_prefill_fn's default
+        self.params = params
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.capacity = capacity
+        self.buckets = tuple(sorted(buckets))
+        self.sp = sp
+        self._decode = jax.jit(
+            make_decode_fn(cfg, window=window, ring=False,
+                           yes_id=yes_id, no_id=no_id))
+        self._free = jax.jit(free_slots)
+        self.cache = init_lm_cache(cfg, n_slots, capacity, dtype=cache_dtype)
+        self._queue: deque = deque()
+        self._slots: List[Optional[_Slot]] = [None] * n_slots
+        self._results: Dict[int, RequestResult] = {}
+        self._next_rid = 0
+        self.n_steps = 0
+
+    # -- request intake ------------------------------------------------------
+
+    def submit(self, context: Sequence[Sequence[int]],
+               candidates: Sequence[Sequence[int]],
+               rid: Optional[int] = None) -> int:
+        assert len(candidates) > 0, "a request needs at least one candidate"
+        if rid is None:
+            rid = self._next_rid
+        assert (rid not in self._results
+                and all(q[0] != rid for q in self._queue)
+                and all(s is None or s.rid != rid for s in self._slots)), (
+            f"request id {rid} already pending")
+        self._next_rid = max(self._next_rid, rid + 1)
+        ctx = [self.sp.bos]
+        for it in context:
+            ctx.extend(it)
+        longest = max(len(c) + 1 for c in candidates)
+        assert longest <= self.buckets[-1], (
+            f"candidate burst {longest} > largest bucket {self.buckets[-1]}")
+        assert len(ctx) + longest <= self.capacity, (
+            f"context {len(ctx)} + burst {longest} > capacity {self.capacity}")
+        self._queue.append((rid, ctx, [list(c) for c in candidates],
+                            time.perf_counter()))
+        return rid
+
+    def _admit(self, row: int, rid: int, ctx: List[int],
+               candidates: List[List[int]], t0: float) -> None:
+        units: deque = deque()
+        chunk = self.buckets[-1]
+        for lo in range(0, len(ctx), chunk):
+            part = ctx[lo: lo + chunk]
+            units.append(_Unit(
+                tokens=np.asarray(part, np.int32),
+                positions=np.arange(lo, lo + len(part), dtype=np.int32),
+                is_sum=np.zeros(len(part), bool),
+                seg=np.full(len(part), -1, np.int32), commit=True))
+        n = len(ctx)
+        burst_total = 0
+        # Greedy-fill candidates into shared bursts: each candidate+[SUM]
+        # group carries its index as an in-burst segment, so one decode step
+        # scores as many candidates as fit in the largest bucket. A burst
+        # also writes (unreachable) KV at slots n..n+len-1, so it must stay
+        # within the cache rows left above the context.
+        burst_cap = min(chunk, self.capacity - n)
+        toks: List[int] = []
+        pos: List[int] = []
+        is_sum: List[bool] = []
+        seg: List[int] = []
+        score_at: List[Tuple[int, int]] = []
+
+        def flush():
+            if toks:
+                units.append(_Unit(
+                    tokens=np.asarray(toks, np.int32),
+                    positions=np.asarray(pos, np.int32),
+                    is_sum=np.asarray(is_sum),
+                    seg=np.asarray(seg, np.int32),
+                    commit=False, score_at=list(score_at)))
+            for l in (toks, pos, is_sum, seg, score_at):
+                l.clear()
+
+        for j, cand in enumerate(candidates):
+            group = list(cand) + [self.sp.sum]
+            burst_total += len(group)
+            if toks and len(toks) + len(group) > burst_cap:
+                flush()
+            toks.extend(group)
+            pos.extend(range(n, n + len(group)))   # every candidate restarts
+            is_sum.extend([False] * len(cand) + [True])
+            seg.extend([j] * len(group))
+            score_at.append((j, len(toks) - 1))
+        flush()
+        self._slots[row] = _Slot(
+            rid=rid, units=units, scores=[None] * len(candidates),
+            submit_t=t0, context_tokens=n, burst_tokens=burst_total,
+            n_candidates=len(candidates))
+
+    # -- the batched step ----------------------------------------------------
+
+    def step(self) -> bool:
+        """Admit into free rows, run one batched decode step over every busy
+        row's next work unit, harvest scores, evict finished rows. Returns
+        False when queue and slots are both empty (nothing happened)."""
+        admitted = np.zeros((self.n_slots,), bool)
+        for row in range(self.n_slots):
+            if self._slots[row] is None and self._queue:
+                self._admit(row, *self._queue.popleft())
+                admitted[row] = True
+        if admitted.any():
+            self.cache = self._free(self.cache, jnp.asarray(admitted))
+
+        work = [(row, slot.units.popleft())
+                for row, slot in enumerate(self._slots)
+                if slot is not None and slot.units]
+        if not work:
+            return False
+        need = max(len(u.tokens) for _, u in work)
+        s = next(b for b in self.buckets if b >= need)
+
+        tokens = np.zeros((self.n_slots, s), np.int32)
+        positions = np.zeros((self.n_slots, s), np.int32)
+        is_sum = np.zeros((self.n_slots, s), bool)
+        valid = np.zeros((self.n_slots, s), bool)
+        seg = np.full((self.n_slots, s), -1, np.int32)
+        commit = np.zeros((self.n_slots,), bool)
+        for row, u in work:
+            n = len(u.tokens)
+            tokens[row, :n] = u.tokens
+            positions[row, :n] = u.positions
+            is_sum[row, :n] = u.is_sum
+            seg[row, :n] = u.seg
+            valid[row, :n] = True
+            commit[row] = u.commit
+
+        p, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(positions), jnp.asarray(is_sum),
+            jnp.asarray(valid), jnp.asarray(commit), jnp.asarray(seg))
+        self.n_steps += 1
+        p = np.asarray(p)
+
+        now = time.perf_counter()
+        for row, u in work:
+            slot = self._slots[row]
+            for j, off in u.score_at:
+                slot.scores[j] = float(p[row, off])
+            if not slot.units:                       # evict: request done
+                c, b = slot.context_tokens, slot.burst_tokens
+                k = slot.n_candidates
+                self._results[slot.rid] = RequestResult(
+                    rid=slot.rid, scores=list(slot.scores),
+                    latency_s=now - slot.submit_t,
+                    context_tokens=c, burst_tokens=b,
+                    cached_tokens=(k - 1) * c,
+                    logical_tokens=k * c + b)
+                self._slots[row] = None
+        return True
+
+    def run(self) -> Dict[int, RequestResult]:
+        """Drain queue and slots; returns results for every request scored
+        since the last ``run``."""
+        while self.step():
+            pass
+        out, self._results = self._results, {}
+        return out
+
+
+__all__ = ["ServeScheduler", "RequestResult"]

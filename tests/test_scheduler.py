@@ -1,0 +1,138 @@
+"""Continuous-batching scheduler: batched == sequential == independent
+prefills, slot eviction/readmission, no cross-request leakage through the
+shared batched cache."""
+import jax
+import numpy as np
+import pytest
+
+from repro.data.requests import make_request_stream
+from repro.data.synthetic import make_ctr_dataset
+from repro.models.transformer import ModelConfig, init_params
+from repro.serve.scheduler import ServeScheduler
+
+from test_serve import _cfg, _independent_scores, _request_material
+
+
+def _sched(params, cfg, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("capacity", 64)
+    kw.setdefault("buckets", (8, 16, 32))
+    return ServeScheduler(params, cfg, **kw)
+
+
+@pytest.mark.parametrize("attn_type", ["gqa", "mla"])
+def test_scheduler_matches_independent_prefills(attn_type):
+    """Decode bursts against the shared context cache == k standalone
+    sliding-window prefills (the acceptance bar of the serving subsystem)."""
+    cfg = _cfg(attn_type)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ctx, cands = _request_material(seed=3)
+    sched = _sched(params, cfg)
+    rid = sched.submit(ctx, cands)
+    res = sched.run()[rid]
+    want = _independent_scores(params, cfg, ctx, cands, max_len=96)
+    np.testing.assert_allclose(np.asarray(res.scores), want, atol=1e-4)
+    assert res.cached_tokens == (len(cands) - 1) * res.context_tokens
+    assert 0.0 < res.cache_hit_fraction < 1.0
+
+
+def test_scheduler_windowed_matches_independent():
+    """The window term must bind identically on the prefill and burst paths."""
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(4), cfg)
+    ctx, cands = _request_material(seed=4, n_ctx=5)
+    W = 8
+    sched = _sched(params, cfg, window=W)
+    rid = sched.submit(ctx, cands)
+    res = sched.run()[rid]
+    want = _independent_scores(params, cfg, ctx, cands, max_len=96, window=W)
+    np.testing.assert_allclose(np.asarray(res.scores), want, atol=1e-4)
+
+
+def test_eviction_and_readmission():
+    """More requests than slots: every request is scored, slots are reused,
+    and batching never changes a score vs running each request alone."""
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    reqs = [_request_material(seed=10 + i, n_ctx=3, k=3) for i in range(5)]
+
+    solo = []
+    for ctx, cands in reqs:
+        s = _sched(params, cfg, n_slots=1)
+        rid = s.submit(ctx, cands)
+        solo.append(s.run()[rid].scores)
+
+    sched = _sched(params, cfg, n_slots=2)       # 5 requests through 2 slots
+    rids = [sched.submit(ctx, cands) for ctx, cands in reqs]
+    res = sched.run()
+    assert len(res) == len(reqs)
+    assert all(s is None for s in sched._slots)  # everything evicted
+    for rid, want in zip(rids, solo):
+        np.testing.assert_allclose(res[rid].scores, want, atol=1e-5)
+
+
+def test_no_cross_request_leakage():
+    """A request's scores must be invariant to whatever shares the batch:
+    rows of the batched cache are hard request boundaries."""
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(2), cfg)
+    ctx_a, cands_a = _request_material(seed=20)
+    ctx_b, cands_b = _request_material(seed=21, n_ctx=6, k=2)
+
+    alone = _sched(params, cfg, n_slots=2)
+    rid_alone = alone.submit(ctx_a, cands_a)
+    scores_alone = alone.run()[rid_alone].scores
+
+    together = _sched(params, cfg, n_slots=2)
+    rid_a = together.submit(ctx_a, cands_a)
+    together.submit(ctx_b, cands_b)
+    scores_together = together.run()[rid_a].scores
+    np.testing.assert_allclose(scores_together, scores_alone, atol=1e-6)
+
+
+def test_multi_candidate_burst_packing():
+    """Many short candidates ride one burst; a slate wider than the largest
+    bucket is split but still scored correctly and in order."""
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(3), cfg)
+    ctx, _ = _request_material(seed=30, n_ctx=3)
+    cands = [[8 + j, 9 + j] for j in range(12)]  # 12 * 3 tok > bucket 16
+    sched = _sched(params, cfg, buckets=(8, 16))
+    rid = sched.submit(ctx, cands)
+    res = sched.run()[rid]
+    want = _independent_scores(params, cfg, ctx, cands, max_len=96)
+    np.testing.assert_allclose(np.asarray(res.scores), want, atol=1e-4)
+    # 1 context chunk + ceil(12*3/16)=3 bursts, not 12 single-candidate steps
+    assert sched.n_steps <= 4
+
+
+def test_tight_capacity_burst_packing():
+    """Bursts must stay within the cache rows left above the context even
+    when the bucket is larger, and chunk padding that points past capacity
+    must be dropped, not clamped onto the last slot (which would corrupt
+    the burst's own [SUM] entry)."""
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(6), cfg)
+    ctx = [[20 + i] for i in range(14)]            # 1 + 14 context tokens
+    cands = [[40 + j, 50 + j] for j in range(6)]   # 6 x (2 tok + [SUM])
+    # capacity 24 leaves 9 slots above the 15-token context < bucket 16
+    sched = _sched(params, cfg, n_slots=1, capacity=24, buckets=(16,))
+    rid = sched.submit(ctx, cands)
+    res = sched.run()[rid]
+    want = _independent_scores(params, cfg, ctx, cands, max_len=96)
+    np.testing.assert_allclose(np.asarray(res.scores), want, atol=1e-4)
+
+
+def test_request_stream_feeds_scheduler():
+    """The synthetic request generator produces schedulable requests."""
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(5), cfg)
+    ds = make_ctr_dataset(n_users=4, n_items=30, seq_len=8,
+                          vocab_size=cfg.vocab_size)
+    reqs = make_request_stream(ds, n_requests=3, k=4, n_ctx=3, seed=0)
+    sched = _sched(params, cfg, capacity=96, buckets=(16, 32))
+    rids = [sched.submit(r["context"], r["candidates"]) for r in reqs]
+    res = sched.run()
+    for rid in rids:
+        assert len(res[rid].scores) == 4
+        assert all(0.0 <= p <= 1.0 for p in res[rid].scores)

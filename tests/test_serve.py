@@ -1,13 +1,16 @@
 """Serving engine: decode == prefill, ring == full cache, absorbed MLA,
-CTRServer end-to-end."""
+multi-target shared-context prefill, CTRServer end-to-end."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.dti import (build_multi_target_request, build_sliding_prompts,
+                            candidate_sum_slots)
 from repro.models.transformer import ModelConfig, init_params
-from repro.serve.cache import init_lm_cache, slot_indices
-from repro.serve.engine import CTRServer, make_decode_fn, make_prefill_fn
+from repro.serve.cache import free_slots, init_lm_cache, slot_indices
+from repro.serve.engine import (CTRServer, make_decode_fn,
+                                make_multi_target_prefill_fn, make_prefill_fn)
 
 MLA = dict(q_lora_rank=24, kv_lora_rank=16, qk_nope_dim=8, qk_rope_dim=8,
            v_head_dim=16)
@@ -88,6 +91,103 @@ def test_mla_latent_cache_is_small():
     assert "ckv" in cache and "kpe" in cache
     # latent, not per-head: (L, B, cap, r_kv)
     assert cache["ckv"].shape == (3, 2, 16, cfg.kv_lora_rank)
+
+
+def _request_material(seed=0, n_ctx=4, k=4, vocab=128):
+    r = np.random.default_rng(seed)
+    ctx = [list(r.integers(8, vocab, 4)) for _ in range(n_ctx)]
+    cands = [list(r.integers(8, vocab, int(r.integers(2, 5))))
+             for _ in range(k)]
+    return ctx, cands
+
+
+def _independent_scores(params, cfg, ctx, cands, max_len, window=None):
+    """k standalone [BOS] ctx cand [SUM] sliding-window prefills."""
+    pre = make_prefill_fn(cfg, window=window)
+    out = []
+    for cand in cands:
+        (prompt,) = build_sliding_prompts(
+            ctx + [cand], [0] * (len(ctx) + 1), n_ctx=len(ctx),
+            max_len=max_len)
+        p = np.asarray(pre(params, {k: v[None] for k, v in prompt.items()}))
+        out.append(p[0, np.flatnonzero(prompt["is_sum"])[-1]])
+    return np.asarray(out)
+
+
+@pytest.mark.parametrize("attn_type", ["gqa", "mla"])
+def test_multi_target_prefill_matches_independent(attn_type):
+    """One prefill over a shared-context row (context segment + k isolated
+    [SUM]-terminated candidate segments) must reproduce k independent
+    sliding-window prefills — the serving-side version of the paper's
+    shared-context trick."""
+    cfg = _cfg(attn_type)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ctx, cands = _request_material()
+    row = build_multi_target_request(ctx, cands, max_len=96)
+    p = np.asarray(make_multi_target_prefill_fn(cfg)(
+        params, {k: v[None] for k, v in row.items()}))
+    got = p[0, candidate_sum_slots(row)]
+    want = _independent_scores(params, cfg, ctx, cands, max_len=96)
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+def test_multi_target_no_cross_candidate_leakage():
+    """Perturbing one candidate's tokens must leave every other candidate's
+    score bit-identical — candidates share the context, never each other."""
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    ctx, cands = _request_material(seed=1)
+    prefill = make_multi_target_prefill_fn(cfg)
+
+    def scores(cands_):
+        row = build_multi_target_request(ctx, cands_, max_len=96)
+        p = np.asarray(prefill(params, {k: v[None] for k, v in row.items()}))
+        return p[0, candidate_sum_slots(row)]
+
+    base = scores(cands)
+    mutated = [list(c) for c in cands]
+    mutated[1] = [9, 10, 11]                     # different tokens AND length
+    got = scores(mutated)
+    np.testing.assert_array_equal(np.delete(got, 1), np.delete(base, 1))
+    assert got[1] != base[1]
+
+
+def test_decode_burst_does_not_commit():
+    """A commit=False decode burst must score against the cached context and
+    leave pos/cursor untouched, so repeated bursts see the pristine cache."""
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(2), cfg)
+    decode = make_decode_fn(cfg, window=0, ring=False)
+    cache = init_lm_cache(cfg, 1, 32, dtype=jnp.float32)
+    r = np.random.default_rng(2)
+    ctx = r.integers(8, 128, (1, 6)).astype(np.int32)
+    pos = np.arange(6, dtype=np.int32)[None]
+    ns = np.zeros((1, 6), bool)
+    _, cache = decode(params, cache, ctx, pos, ns)         # commit context
+
+    burst_t = np.asarray([[40, 41, 2]], np.int32)          # cand + [SUM]
+    burst_p = np.asarray([[6, 7, 8]], np.int32)
+    burst_s = np.asarray([[False, False, True]])
+    ones, no_commit = np.ones((1, 3), bool), np.zeros((1,), bool)
+    p1, c1 = decode(params, cache, burst_t, burst_p, burst_s, ones, no_commit)
+    np.testing.assert_array_equal(np.asarray(c1["pos"]),
+                                  np.asarray(cache["pos"]))
+    np.testing.assert_array_equal(np.asarray(c1["cursor"]),
+                                  np.asarray(cache["cursor"]))
+    p2, _ = decode(params, c1, burst_t, burst_p, burst_s, ones, no_commit)
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+
+def test_free_slots_resets_only_masked_rows():
+    cfg = _cfg()
+    cache = init_lm_cache(cfg, 2, 8, dtype=jnp.float32)
+    cache["pos"] = cache["pos"].at[:, :3].set(jnp.arange(3))
+    cache["cursor"] = jnp.asarray([3, 3], jnp.int32)
+    out = free_slots(cache, jnp.asarray([True, False]))
+    assert int(out["cursor"][0]) == 0 and int(out["cursor"][1]) == 3
+    assert np.all(np.asarray(out["pos"][0]) == -1)
+    np.testing.assert_array_equal(np.asarray(out["pos"][1]),
+                                  np.asarray(cache["pos"][1]))
 
 
 def test_ctr_server_scores_prompts():
