@@ -163,6 +163,8 @@ def pack_prompts(prompts: List[Dict[str, np.ndarray]], max_len: int, *,
       positions    restart at 0 at each segment boundary, so RoPE / window /
                    ALiBi / reset distances match the unpacked prompt exactly
       tokens/is_sum/labels/valid  concatenated prompt fields
+      target_mask  carried through when present (streaming rows supervise a
+                   subset of their [SUM] positions; docs/streaming.md)
 
     Cross-segment isolation is enforced downstream by the seg_q == seg_k
     term of ``repro.core.windowed.dti_mask`` (and its blocked / Pallas
@@ -185,6 +187,10 @@ def pack_prompts(prompts: List[Dict[str, np.ndarray]], max_len: int, *,
             bins.append([i])
             free.append(max_len - n)
 
+    has_tm = bool(prompts) and "target_mask" in prompts[0]
+    assert all(("target_mask" in p) == has_tm for p in prompts), (
+        "mixed prompts: target_mask must be present on all rows or none "
+        "(a silently dropped mask would re-supervise trained targets)")
     rows = []
     for members in bins:
         t = np.full((max_len,), sp.pad, np.int32)
@@ -193,6 +199,7 @@ def pack_prompts(prompts: List[Dict[str, np.ndarray]], max_len: int, *,
         s = np.zeros((max_len,), bool)
         lab = np.zeros((max_len,), np.int32)
         valid = np.zeros((max_len,), bool)
+        tm = np.zeros((max_len,), bool)
         off = 0
         for si, i in enumerate(members):
             n = lengths[i]
@@ -204,11 +211,19 @@ def pack_prompts(prompts: List[Dict[str, np.ndarray]], max_len: int, *,
             s[sl] = p["is_sum"][:n]
             lab[sl] = p["labels"][:n]
             valid[sl] = True
+            if has_tm:
+                tm[sl] = p["target_mask"][:n]
             off += n
         if stats is not None:
-            stats.add_packed_row(off, len(members), int(s.sum()), max_len)
-        rows.append({"tokens": t, "positions": pos, "segment_ids": seg,
-                     "is_sum": s, "labels": lab, "valid": valid})
+            # supervised targets: target_mask when present ([SUM]s re-emitted
+            # as context don't count), every [SUM] otherwise
+            stats.add_packed_row(off, len(members),
+                                 int((tm if has_tm else s).sum()), max_len)
+        row = {"tokens": t, "positions": pos, "segment_ids": seg,
+               "is_sum": s, "labels": lab, "valid": valid}
+        if has_tm:
+            row["target_mask"] = tm
+        rows.append(row)
     return rows
 
 

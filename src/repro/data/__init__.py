@@ -1,8 +1,9 @@
 """repro.data — synthetic corpora, tokenizer, samplers, serving request
-streams."""
+streams and training event streams."""
 from repro.data.tokenizer import HashTokenizer
 from repro.data.synthetic import CTRDataset, make_ctr_dataset, split_users
 from repro.data.sampler import (Graph, SampledSubgraph, make_community_graph,
                                 make_molecule_batch, sample_neighbors)
 from repro.data.recsys_gen import RecsysGenerator
-from repro.data.requests import make_request_stream
+from repro.data.requests import (make_event_stream, make_request_stream,
+                                 stream_digest, warm_histories)

@@ -1,17 +1,30 @@
-"""Synthetic serving request streams (one user context + k candidate items).
+"""Synthetic serving request streams and interaction event streams.
 
-The request shape end-to-end LLM rankers serve: per page view, one user's
-recent interaction history and a slate of k candidate items to score. Built
-on the same latent-factor corpus as training (`repro.data.synthetic`), so
-scheduler/benchmark runs exercise realistic token-length distributions:
-context interactions carry their rating token, candidates are unrated
-(their click is what serving predicts).
+Two stream shapes, both built on the same latent-factor corpus as training
+(`repro.data.synthetic`) so scheduler / benchmark / continual-training runs
+exercise realistic token-length distributions:
 
-Consumed by ``repro.serve.scheduler.ServeScheduler.submit``,
-``CTRServer.score_multi_target`` and ``benchmarks/serve_bench.py``.
+* ``make_request_stream``  — serving requests: per page view, one user's
+  recent interaction history and a slate of k candidate items to score.
+  Context interactions carry their rating token, candidates are unrated
+  (their click is what serving predicts). Consumed by
+  ``repro.serve.scheduler.ServeScheduler.submit``,
+  ``CTRServer.score_multi_target`` and ``benchmarks/serve_bench.py``.
+* ``make_event_stream``    — training events: each user's *future*
+  interactions replayed in chronological per-user order, interleaved
+  across users and sliced into arrival ticks. Consumed by
+  ``repro.stream`` (incremental DTI) and ``benchmarks/stream_bench.py``.
+
+Determinism contract: every draw comes from one ``np.random.default_rng``
+(PCG64) in a fixed, documented order, and every emitted value is a plain
+Python int/list — no set/dict iteration, no float jitter — so the same
+seed yields a byte-identical stream (``stream_digest`` canonicalises a
+stream for comparison; regression test in tests/test_data.py).
 """
 from __future__ import annotations
 
+import hashlib
+import json
 from typing import Dict, List
 
 import numpy as np
@@ -24,7 +37,11 @@ def make_request_stream(ds: CTRDataset, *, n_requests: int, k: int,
     """Draw ``n_requests`` requests: a random user's ``n_ctx`` consecutive
     interactions (with rating tokens) as context, and ``k`` random items
     (without ratings) as the candidate slate. Returns dicts with ``context``
-    and ``candidates``, each a list of per-item token lists."""
+    and ``candidates``, each a list of per-item token lists.
+
+    Draw order per request (fixed so seeded runs are byte-deterministic):
+    user id, context window offset, then the k candidate item ids.
+    """
     rng = np.random.default_rng(seed)
     out = []
     n_items = len(ds.item_tokens)
@@ -36,10 +53,81 @@ def make_request_stream(ds: CTRDataset, *, n_requests: int, k: int,
         cands = rng.integers(0, n_items, size=k)
         out.append({
             "user": u,
-            "context": toks[lo: lo + n_ctx],
-            "candidates": [list(ds.item_tokens[i]) for i in cands],
+            "context": [[int(t) for t in it] for it in toks[lo: lo + n_ctx]],
+            "candidates": [[int(t) for t in ds.item_tokens[int(i)]]
+                           for i in cands],
         })
     return out
 
 
-__all__ = ["make_request_stream"]
+def make_event_stream(ds: CTRDataset, *, n_ticks: int,
+                      start_frac: float = 0.5, end_frac: float = 1.0,
+                      seed: int = 0) -> List[List[Dict]]:
+    """Replay a slice of every user's history as a stream of arrival ticks.
+
+    Interactions before ``start_frac`` of each user's timeline are the warm
+    corpus (seed them into the incremental builder / pretrain on them);
+    those from ``end_frac`` on are held back (an untouched chronological
+    tail for evaluation); the rest become events. Per-user chronology is preserved — user u's i-th
+    event always precedes their (i+1)-th — while users interleave in a
+    seeded random order (one global shuffle of (user, slot) pairs, then a
+    stable per-user reorder). The flat order is sliced into ``n_ticks``
+    near-equal chunks.
+
+    Each event is ``{"user", "index", "item_tokens", "label"}`` where
+    ``index`` is the interaction's absolute position in the user's history
+    and ``item_tokens`` includes the rating token (the same per-interaction
+    material training prompts are built from).
+    """
+    assert n_ticks > 0 and 0.0 <= start_frac < end_frac <= 1.0
+    rng = np.random.default_rng(seed)
+    events: List[Dict] = []
+    pending: List[List[Dict]] = []
+    for u in range(len(ds.sequences)):
+        toks, labels = ds.user_prompt_material(u)
+        start = int(len(toks) * start_frac)
+        end = int(len(toks) * end_frac)
+        pending.append([
+            {"user": u, "index": i,
+             "item_tokens": [int(t) for t in toks[i]],
+             "label": int(labels[i])}
+            for i in range(start, end)])
+    owners = np.repeat(np.arange(len(pending)),
+                       [len(p) for p in pending])
+    rng.shuffle(owners)
+    cursor = [0] * len(pending)
+    for u in owners:                       # per-user order preserved
+        events.append(pending[u][cursor[u]])
+        cursor[u] += 1
+    n = len(events)
+    ticks, lo = [], 0
+    for t in range(n_ticks):
+        hi = (n * (t + 1)) // n_ticks
+        ticks.append(events[lo:hi])
+        lo = hi
+    return ticks
+
+
+def warm_histories(ds: CTRDataset, *, start_frac: float = 0.5):
+    """The warm prefix ``make_event_stream`` does not replay: per user,
+    (per-interaction token lists, labels) up to ``start_frac``."""
+    out = []
+    for u in range(len(ds.sequences)):
+        toks, labels = ds.user_prompt_material(u)
+        start = int(len(toks) * start_frac)
+        out.append(([[int(t) for t in it] for it in toks[:start]],
+                    [int(l) for l in labels[:start]]))
+    return out
+
+
+def stream_digest(stream) -> str:
+    """Canonical sha256 of a request/event stream (nested python
+    ints/lists/dicts; dict keys sorted) — the byte-determinism regression
+    check: same seed, same digest."""
+    blob = json.dumps(stream, sort_keys=True, separators=(",", ":"),
+                      default=int).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
+__all__ = ["make_request_stream", "make_event_stream", "warm_histories",
+           "stream_digest"]

@@ -412,6 +412,11 @@ class CTRServer:
         self._mt_prefill = jax.jit(make_multi_target_prefill_fn(
             self.cfg, yes_id=self.yes_id, no_id=self.no_id))
 
+    def update_params(self, params) -> None:
+        """Hot-swap serving weights (e.g. from a continual-training
+        ``ParamPublisher``); params are a jit argument, so no recompile."""
+        self.params = params
+
     def score(self, prompts) -> "list[float]":
         import numpy as np
         b = len(prompts)

@@ -118,6 +118,35 @@ class ServeScheduler:
         self._results: Dict[int, RequestResult] = {}
         self._next_rid = 0
         self.n_steps = 0
+        self._param_source = None
+        self._poll_every = 1
+        self._poll_tick = 0
+        self.params_version: Optional[int] = None
+
+    # -- weight hot-swap -----------------------------------------------------
+
+    def attach_param_source(self, source, *, poll_every: int = 8) -> None:
+        """``source()`` -> None or (version, params) — e.g.
+        ``repro.stream.publish.ParamSubscriber(...).poll``. Polled at the
+        top of ``step``, every ``poll_every``-th call: the source may hit a
+        filesystem/object store, so the default keeps that I/O off the
+        per-step decode hot path (weights change every ~publish_every
+        trainer steps; sub-step freshness buys nothing). Freshly published
+        weights land between decode steps without dropping in-flight slots
+        (their cached context KV stays; a request straddling a swap is
+        scored under mixed versions — see docs/streaming.md for the
+        staleness contract)."""
+        assert poll_every >= 1
+        self._param_source = source
+        self._poll_every = poll_every
+
+    def update_params(self, params, version: Optional[int] = None) -> None:
+        """Swap serving weights in place. Params are a jit argument, so the
+        bucketed decode step does not recompile; queued requests and busy
+        slots are untouched."""
+        self.params = params
+        if version is not None:
+            self.params_version = version
 
     # -- request intake ------------------------------------------------------
 
@@ -202,6 +231,14 @@ class ServeScheduler:
         """Admit into free rows, run one batched decode step over every busy
         row's next work unit, harvest scores, evict finished rows. Returns
         False when queue and slots are both empty (nothing happened)."""
+        if self._param_source is not None:
+            # dedicated counter: n_steps stalls on idle calls, which would
+            # either re-poll every call or never poll again
+            if self._poll_tick % self._poll_every == 0:
+                update = self._param_source()
+                if update is not None:
+                    self.update_params(update[1], update[0])
+            self._poll_tick += 1
         admitted = np.zeros((self.n_slots,), bool)
         for row in range(self.n_slots):
             if self._slots[row] is None and self._queue:

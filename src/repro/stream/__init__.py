@@ -1,0 +1,14 @@
+"""Streaming continual training: incremental DTI over growing histories.
+
+Closes the train->serve loop (docs/streaming.md): events -> incremental
+prompt construction (``incremental``) -> async fixed-shape batching
+(``pipeline``) -> online fine-tuning with streaming eval (``online``) ->
+weight publication into the live serving fleet (``publish``).
+"""
+from repro.stream.incremental import IncrementalDTI
+from repro.stream.online import EvalWindow, OnlineTrainer, make_stream_loss_fn
+from repro.stream.pipeline import StreamPipeline
+from repro.stream.publish import ParamPublisher, ParamSubscriber
+
+__all__ = ["IncrementalDTI", "StreamPipeline", "OnlineTrainer", "EvalWindow",
+           "make_stream_loss_fn", "ParamPublisher", "ParamSubscriber"]

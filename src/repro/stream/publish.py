@@ -1,0 +1,66 @@
+"""Weight publication: online trainer -> serving fleet, no restarts.
+
+Transport is the checkpoint store (``repro.train.checkpoint``): the
+publisher writes params-only versions with the same atomic
+``tmp.<v>`` -> ``os.replace`` -> ``step_<v>`` protocol, so a subscriber
+polling the directory only ever sees complete versions — a crash mid-write
+never publishes a torn checkpoint. Versions are the online trainer's step
+numbers: monotonic, so ``poll`` is a single ``latest_step`` check.
+
+Consumers:
+
+* ``ServeScheduler.attach_param_source(sub.poll)`` — the continuous-
+  batching scheduler polls between decode steps and swaps params in place.
+  In-flight slots are NOT dropped: their already-cached context KV stays
+  (computed under the old weights), only subsequent steps use the new
+  ones, so a request straddling a swap is scored under mixed versions —
+  bounded staleness traded for zero dropped traffic (docs/streaming.md).
+* ``CTRServer.update_params`` — prefill-path hot-swap; params are a jit
+  *argument*, so swapping triggers no recompilation in either consumer.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+from repro.train.checkpoint import CheckpointManager
+
+
+class ParamPublisher:
+    """Writes versioned params; ``keep`` old versions survive so slow
+    subscribers never watch their version vanish mid-restore."""
+
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.mgr = CheckpointManager(directory, keep=keep, save_interval=1,
+                                     async_write=False)
+
+    def publish(self, version: int, params: Any) -> None:
+        self.mgr.save(version, params, meta={"version": version}, block=True)
+
+    def latest_version(self) -> Optional[int]:
+        return self.mgr.latest_step()
+
+
+class ParamSubscriber:
+    """Polls a publisher directory; returns ``(version, params)`` when a
+    newer version than the last one seen exists, else None. ``template``
+    pins the expected pytree structure/shapes (shape drift is rejected by
+    the checkpoint layer, not silently loaded)."""
+
+    def __init__(self, directory: str, template: Any, *,
+                 version: Optional[int] = None):
+        self.mgr = CheckpointManager(directory, save_interval=1,
+                                     async_write=False)
+        self.template = template
+        self.version = -1 if version is None else version
+
+    def poll(self) -> Optional[Tuple[int, Any]]:
+        latest = self.mgr.latest_step()
+        if latest is None or latest <= self.version:
+            return None
+        params = self.mgr.restore(self.template, step=latest)
+        self.version = latest
+        self.template = params
+        return latest, params
+
+
+__all__ = ["ParamPublisher", "ParamSubscriber"]
