@@ -1,10 +1,11 @@
 """Serving throughput benchmark: per-candidate re-prefill vs shared context.
 
     PYTHONPATH=src python -m benchmarks.serve_bench [--smoke] \
+        [--attn-impl {dense,pallas}] [--repeat-frac F] \
         [--json BENCH_serve.json]
 
-Three ways to score the same request stream (one user context, k candidate
-items per request), all producing the same p(click) per candidate:
+Ways to score the same request stream (one user context, k candidate items
+per request), all producing the same p(click) per candidate:
 
   * ``naive``         — the paper's inference procedure taken literally: one
     sliding-window prompt per candidate, k prefills per request (the context
@@ -13,13 +14,26 @@ items per request), all producing the same p(click) per candidate:
     context segment + k isolated [SUM]-terminated candidate segments
     (``repro.serve.engine.make_multi_target_prefill_fn``).
   * ``scheduler``     — continuous batching with decode-side shared-context
-    KV reuse (``repro.serve.scheduler.ServeScheduler``): context prefilled
-    once into the batched cache, candidates scored as non-committing bursts.
+    KV reuse and cross-request prefix sharing
+    (``repro.serve.scheduler.ServeScheduler``): context prefilled once into
+    the batched cache, candidates scored as non-committing bursts, contexts
+    retained/refcounted so later requests reuse matching prefixes.
+  * ``scheduler_pallas`` (with ``--attn-impl pallas``) — the same scheduler
+    run through the fused Pallas decode-attention kernel
+    (``repro.kernels.decode_attn``; interpret mode off-TPU) instead of the
+    dense decode einsums, so the perf trajectory records dense vs kernel
+    side by side.
 
-Reports requests/sec, candidates/sec, p50/p99 request latency, and the
-cache-hit token fraction (share of logical prompt tokens never recomputed),
-plus the max |score delta| of each shared mode vs naive. JSON output feeds
-the CI artifact next to BENCH_kernels.json.
+``--repeat-frac`` makes that fraction of requests revisit an earlier
+context with a fresh slate (``repro.data.requests.make_request_stream``),
+the traffic shape prefix sharing exploits.
+
+Reports requests/sec, candidates/sec, p50/p99 request latency, the
+cache-hit token fraction (share of logical prompt tokens never recomputed)
+and the share of prefix-shared admissions, plus the max |score delta| of
+each shared mode vs naive. Every scheduler-mode entry carries a
+``decode_impl`` field. JSON output feeds the CI artifact next to
+BENCH_kernels.json.
 """
 from __future__ import annotations
 
@@ -104,12 +118,22 @@ def run_multi_target(params, cfg, requests, max_len):
                     hit_fraction=hits / max(logical, 1))
 
 
-def run_scheduler(params, cfg, requests, *, n_slots, capacity, buckets):
-    """Continuous batching: shared-context cache + non-committing bursts."""
+def run_scheduler(params, cfg, requests, *, n_slots, capacity, buckets,
+                  attn_impl="dense"):
+    """Continuous batching: shared-context cache + non-committing bursts +
+    cross-request prefix sharing, on the dense or Pallas decode path."""
     sched = ServeScheduler(params, cfg, n_slots=n_slots, capacity=capacity,
-                           window=cfg.window, buckets=buckets)
+                           window=cfg.window, buckets=buckets,
+                           attn_impl=attn_impl)
     sched.submit(requests[0]["context"], requests[0]["candidates"])
     sched.run()                                          # compile per bucket
+    # drop the warmup's retained context block (a params "swap" to the same
+    # params invalidates retained blocks) and reset the counters: otherwise
+    # the timed re-submission of requests[0] scores against a pre-warmed
+    # cache and inflates the shared-admission / cache-hit stats
+    sched.update_params(sched.params)
+    sched.shared_admissions = 0
+    sched.n_steps = 0
     t0 = time.perf_counter()
     rids = [sched.submit(r["context"], r["candidates"]) for r in requests]
     results = sched.run()
@@ -122,6 +146,10 @@ def run_scheduler(params, cfg, requests, *, n_slots, capacity, buckets):
                    len(requests[0]["candidates"]),
                    hit_fraction=hits / max(logical, 1))
     out["steps"] = sched.n_steps
+    out["decode_impl"] = attn_impl
+    out["shared_admission_fraction"] = sched.shared_admissions / len(rids)
+    out["shared_prefix_tokens"] = sum(
+        results[r].shared_prefix_tokens for r in rids)
     return out
 
 
@@ -135,6 +163,15 @@ def main():
     ap.add_argument("--n-ctx", type=int, default=8, dest="n_ctx")
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--attn-impl", default="dense", dest="attn_impl",
+                    choices=("dense", "pallas"),
+                    help="decode path for the scheduler; 'pallas' also "
+                         "runs a scheduler_pallas mode through the fused "
+                         "decode-attention kernel")
+    ap.add_argument("--repeat-frac", type=float, default=0.25,
+                    dest="repeat_frac",
+                    help="fraction of requests revisiting an earlier "
+                         "context (exercises cross-request prefix sharing)")
     args = ap.parse_args()
 
     n_requests = args.requests or (8 if args.smoke else 32)
@@ -143,7 +180,8 @@ def main():
     ds = make_ctr_dataset(n_users=16, n_items=120, seq_len=max(args.n_ctx, 12),
                           vocab_size=cfg.vocab_size, seed=args.seed)
     requests = make_request_stream(ds, n_requests=n_requests, k=args.k,
-                                   n_ctx=args.n_ctx, seed=args.seed)
+                                   n_ctx=args.n_ctx, seed=args.seed,
+                                   repeat_frac=args.repeat_frac)
 
     ctx_len = max(1 + sum(len(t) for t in r["context"]) for r in requests)
     cand_max = max(len(c) + 1 for r in requests for c in r["candidates"])
@@ -153,37 +191,48 @@ def main():
     capacity = ctx_len + max(buckets)
 
     print(f"[serve_bench] {n_requests} requests, k={args.k}, "
-          f"ctx<={ctx_len} tok, candidate burst<={cand_max} tok")
+          f"ctx<={ctx_len} tok, candidate burst<={cand_max} tok, "
+          f"repeat_frac={args.repeat_frac}")
     modes = {
         "naive": run_naive(params, cfg, requests, sw_len),
         "multi_target": run_multi_target(params, cfg, requests, mt_len),
         "scheduler": run_scheduler(params, cfg, requests, n_slots=args.slots,
                                    capacity=capacity, buckets=buckets),
     }
+    shared_modes = ["multi_target", "scheduler"]
+    if args.attn_impl == "pallas":
+        modes["scheduler_pallas"] = run_scheduler(
+            params, cfg, requests, n_slots=args.slots, capacity=capacity,
+            buckets=buckets, attn_impl="pallas")
+        shared_modes.append("scheduler_pallas")
 
     ref = np.asarray(modes["naive"].pop("scores"))
     deltas = {}
-    for name in ("multi_target", "scheduler"):
+    for name in shared_modes:
         sc = np.asarray(modes[name].pop("scores"))
         deltas[name] = float(np.max(np.abs(sc - ref)))
     for name, m in modes.items():
-        print(f"  {name:13s} {m['candidates_per_s']:8.1f} cand/s  "
+        print(f"  {name:16s} {m['candidates_per_s']:8.1f} cand/s  "
               f"{m['requests_per_s']:6.1f} req/s  "
               f"p50 {m['latency_p50_ms']:7.1f} ms  "
               f"p99 {m['latency_p99_ms']:7.1f} ms  "
-              f"cache-hit {m['cache_hit_token_fraction']:.2f}")
+              f"cache-hit {m['cache_hit_token_fraction']:.2f}"
+              + (f"  shared-adm {m['shared_admission_fraction']:.2f}"
+                 if "shared_admission_fraction" in m else ""))
     print(f"  max |p - naive|: {deltas}")
 
     result = {
         "config": {"arch": cfg.name, "n_requests": n_requests, "k": args.k,
                    "n_ctx": args.n_ctx, "slots": args.slots,
-                   "smoke": bool(args.smoke)},
+                   "smoke": bool(args.smoke),
+                   "decode_impl": args.attn_impl,
+                   "repeat_frac": args.repeat_frac},
         "modes": modes,
         "score_max_abs_delta_vs_naive": deltas,
         "speedup_candidates_per_s": {
             name: modes[name]["candidates_per_s"]
             / modes["naive"]["candidates_per_s"]
-            for name in ("multi_target", "scheduler")},
+            for name in shared_modes},
     }
     if args.json:
         with open(args.json, "w") as f:

@@ -1,4 +1,5 @@
-"""Synthetic serving request streams and interaction event streams.
+"""Synthetic serving request streams, interaction event streams, and the
+context-hash trie serving uses to detect shareable prefixes.
 
 Two stream shapes, both built on the same latent-factor corpus as training
 (`repro.data.synthetic`) so scheduler / benchmark / continual-training runs
@@ -7,13 +8,19 @@ exercise realistic token-length distributions:
 * ``make_request_stream``  — serving requests: per page view, one user's
   recent interaction history and a slate of k candidate items to score.
   Context interactions carry their rating token, candidates are unrated
-  (their click is what serving predicts). Consumed by
-  ``repro.serve.scheduler.ServeScheduler.submit``,
+  (their click is what serving predicts). ``repeat_frac`` re-issues
+  earlier contexts with fresh slates (the "same user, next page view"
+  shape) so schedulers exercising cross-request prefix sharing see hits.
+  Consumed by ``repro.serve.scheduler.ServeScheduler.submit``,
   ``CTRServer.score_multi_target`` and ``benchmarks/serve_bench.py``.
 * ``make_event_stream``    — training events: each user's *future*
   interactions replayed in chronological per-user order, interleaved
   across users and sliced into arrival ticks. Consumed by
   ``repro.stream`` (incremental DTI) and ``benchmarks/stream_bench.py``.
+
+``ContextTrie`` indexes committed context token sequences so admission can
+find, in O(|new context|), the deepest already-cached prefix of an
+incoming request (see docs/serving.md for the sharing model).
 
 Determinism contract: every draw comes from one ``np.random.default_rng``
 (PCG64) in a fixed, documented order, and every emitted value is a plain
@@ -25,7 +32,7 @@ from __future__ import annotations
 
 import hashlib
 import json
-from typing import Dict, List
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
@@ -33,31 +40,138 @@ from repro.data.synthetic import CTRDataset
 
 
 def make_request_stream(ds: CTRDataset, *, n_requests: int, k: int,
-                        n_ctx: int, seed: int = 0) -> List[Dict]:
+                        n_ctx: int, seed: int = 0,
+                        repeat_frac: float = 0.0) -> List[Dict]:
     """Draw ``n_requests`` requests: a random user's ``n_ctx`` consecutive
     interactions (with rating tokens) as context, and ``k`` random items
     (without ratings) as the candidate slate. Returns dicts with ``context``
     and ``candidates``, each a list of per-item token lists.
 
+    ``repeat_frac`` > 0 makes that fraction of requests (after the first)
+    *revisits*: the same user + context window as an earlier request but a
+    freshly drawn candidate slate — the traffic shape cross-request prefix
+    sharing exploits (one user paging through results, or a hot context).
+
     Draw order per request (fixed so seeded runs are byte-deterministic):
-    user id, context window offset, then the k candidate item ids.
+    [revisit coin + source index when ``repeat_frac > 0``,] user id,
+    context window offset, then the k candidate item ids; revisits skip
+    the user/offset draws. ``repeat_frac=0`` draws exactly the historical
+    sequence, so pre-existing seeded streams are unchanged.
     """
     rng = np.random.default_rng(seed)
     out = []
     n_items = len(ds.item_tokens)
     for _ in range(n_requests):
-        u = int(rng.integers(0, len(ds.sequences)))
-        toks, _ = ds.user_prompt_material(u)
-        assert len(toks) >= n_ctx, f"user history {len(toks)} < n_ctx {n_ctx}"
-        lo = int(rng.integers(0, len(toks) - n_ctx + 1))
+        revisit = None
+        if repeat_frac > 0.0 and out:
+            if float(rng.random()) < repeat_frac:
+                revisit = out[int(rng.integers(0, len(out)))]
+        if revisit is not None:
+            u = revisit["user"]
+            context = [list(it) for it in revisit["context"]]
+        else:
+            u = int(rng.integers(0, len(ds.sequences)))
+            toks, _ = ds.user_prompt_material(u)
+            assert len(toks) >= n_ctx, (
+                f"user history {len(toks)} < n_ctx {n_ctx}")
+            lo = int(rng.integers(0, len(toks) - n_ctx + 1))
+            context = [[int(t) for t in it] for it in toks[lo: lo + n_ctx]]
         cands = rng.integers(0, n_items, size=k)
         out.append({
             "user": u,
-            "context": [[int(t) for t in it] for it in toks[lo: lo + n_ctx]],
+            "context": context,
             "candidates": [[int(t) for t in ds.item_tokens[int(i)]]
                            for i in cands],
         })
     return out
+
+
+class ContextTrie:
+    """Hash-trie over context token sequences -> opaque owner handles.
+
+    Serving admission asks one question per incoming request: *of the
+    context blocks currently committed in the KV cache, which shares the
+    longest prefix with this request's context, and does any of them end
+    inside it?* The trie answers in O(|context|): nodes are hash maps
+    keyed by token id; each node records the owners whose full context
+    **ends** there and the owners whose context **passes through** it.
+
+    Owners are opaque hashables (the scheduler uses cache row ids). One
+    owner owns at most one sequence at a time — re-inserting an owner
+    under a new sequence requires removing the old one first (the
+    scheduler does this when it extends or trims a retained context).
+    """
+
+    def __init__(self):
+        self._root = self._node()
+        self._len: Dict[object, int] = {}       # owner -> |its sequence|
+
+    @staticmethod
+    def _node() -> Dict:
+        return {"kids": {}, "ends": set(), "through": set()}
+
+    def __len__(self) -> int:
+        return len(self._len)
+
+    def owner_length(self, owner) -> int:
+        """Length of the sequence ``owner`` currently owns (KeyError if
+        absent)."""
+        return self._len[owner]
+
+    def insert(self, tokens: Sequence[int], owner) -> None:
+        assert owner not in self._len, f"owner {owner!r} already in trie"
+        node = self._root
+        node["through"].add(owner)
+        for t in tokens:
+            node = node["kids"].setdefault(int(t), self._node())
+            node["through"].add(owner)
+        node["ends"].add(owner)
+        self._len[owner] = len(tokens)
+
+    def remove(self, tokens: Sequence[int], owner) -> None:
+        assert self._len.get(owner) == len(tokens), (
+            f"owner {owner!r} does not own a length-{len(tokens)} sequence")
+        node, path = self._root, []
+        node["through"].discard(owner)
+        for t in tokens:
+            path.append((node, int(t)))
+            node = node["kids"][int(t)]
+            node["through"].discard(owner)
+        node["ends"].discard(owner)
+        del self._len[owner]
+        # prune now-unowned branches so the trie stays O(live contexts)
+        for parent, t in reversed(path):
+            child = parent["kids"][t]
+            if not child["through"]:
+                del parent["kids"][t]
+
+    def match(self, tokens: Sequence[int]) -> Tuple[int, set, int, set]:
+        """Walk ``tokens`` as deep as the trie goes.
+
+        Returns ``(end_depth, end_owners, through_depth, through_owners)``:
+
+        * ``end_owners`` — owners whose **entire** sequence is a prefix of
+          ``tokens``, at the deepest such depth ``end_depth`` (these can be
+          reused as-is: commit/score only the suffix);
+        * ``through_owners`` — owners passing through the deepest reachable
+          node at ``through_depth`` (their sequences share the first
+          ``through_depth`` tokens with ``tokens`` but continue past it —
+          reusable only by trimming back to the shared prefix).
+
+        Empty sets / depth 0 when nothing matches.
+        """
+        node = self._root
+        end_depth, end_owners = 0, set()
+        depth = 0
+        for t in tokens:
+            nxt = node["kids"].get(int(t))
+            if nxt is None:
+                break
+            node = nxt
+            depth += 1
+            if node["ends"]:
+                end_depth, end_owners = depth, set(node["ends"])
+        return end_depth, end_owners, depth, set(node["through"])
 
 
 def make_event_stream(ds: CTRDataset, *, n_ticks: int,
@@ -129,5 +243,5 @@ def stream_digest(stream) -> str:
     return hashlib.sha256(blob).hexdigest()
 
 
-__all__ = ["make_request_stream", "make_event_stream", "warm_histories",
-           "stream_digest"]
+__all__ = ["make_request_stream", "ContextTrie", "make_event_stream",
+           "warm_histories", "stream_digest"]

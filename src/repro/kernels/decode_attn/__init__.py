@@ -1,0 +1,11 @@
+"""Fused Pallas decode-attention for the serving burst path.
+
+Modules mirror ``windowed_attn/``: ``decode_attn.py`` (kernel + schedule),
+``ops.py`` (public op with the custom Pallas lowering), ``ref.py`` (dense
+oracle for tests). Entry point: ``repro.kernels.decode_attn.ops
+.decode_attention``; wired into serving via
+``repro.serve.engine.make_decode_fn(..., attn_impl="pallas")``.
+"""
+from repro.kernels.decode_attn.ops import decode_attention
+
+__all__ = ["decode_attention"]

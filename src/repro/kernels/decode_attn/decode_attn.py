@@ -1,0 +1,286 @@
+"""Pallas TPU kernel: fused decode attention for the serving burst path.
+
+The scheduler's hot loop (`repro.serve.scheduler`) feeds one work unit per
+busy cache row per step: a chunk of ``s <= bucket`` queries per row
+attending into that row's slice of the batched KV cache — context-prefill
+chunks and non-committing candidate bursts ride the same call. The dense
+path in `repro.serve.engine` materialises two (B, H, s, cap) score tensors
+(RoPE + NoPE), a (B, s, cap) mask and the full probability tensor per
+layer; this kernel fuses the whole thing into one online-softmax pass over
+the cache, so scores/probabilities never touch HBM and cost scales with
+cache *occupancy* rather than capacity.
+
+Schedule:
+
+    grid = (B, H, n_kv)        n_kv = cap_padded // blk_kv
+
+The kv axis is "arbitrary": each (row, head) walks the row's cache blocks
+left to right carrying an online-softmax accumulator (m, l, acc) in VMEM
+scratch. Two structural wins over the dense decode path:
+
+* **occupancy skip** — a cache block whose every slot is empty
+  (``pos_k < 0``) is skipped entirely (`pl.when`): a mostly-empty
+  high-capacity cache costs what its occupancy costs, while the dense
+  einsums always pay full capacity;
+* **no (s, cap) materialisation** — mask terms (filled slot, causal,
+  window, in-burst segment) are index arithmetic against the staged
+  (blk,) ``pos``/``seg`` tiles.
+
+Cache-native layout: K/V tiles are staged directly from the serving cache
+layout ``(B, cap, Hk, D)`` via index maps (query head h reads kv head
+``h // n_rep``) — no transpose or head replication in memory, mirroring
+the windowed training kernel. MLA runs through the same kernel in absorbed
+MQA form (Hk=1): the engine folds q through W_UK and concatenates the
+latent/rope streams so ``Dqk = r_kv + d_rope`` while values stay in the
+latent (``Dv = r_kv != Dqk``); see `repro.serve.engine._mla_decode_layer`.
+
+The full serve feature set is fused:
+
+* per-row cursors / right-padded chunks — empty and padded slots carry
+  ``pos = -1`` and are never attendable (the ``valid`` operand of
+  ``make_decode_fn`` writes them that way);
+* ``commit=False`` scoring bursts — no kernel-side difference: the burst's
+  own tokens are already written into the cache tensors for the step, the
+  kernel just attends what ``pos_k``/``seg_k`` describe;
+* in-burst candidate isolation — ``seg_k >= 0`` entries are attendable
+  only by queries of the same segment; ``seg_k < 0`` (committed context +
+  shared suffix) by everyone;
+* ring/window semantics — the mask is purely positional, so a ring cache
+  (wrapped physical slots, monotone logical positions) needs no special
+  handling; ``window == 0`` means unlimited (decode convention, matching
+  ``_decode_mask``), ``window > 0`` bounds the attendable distance;
+* SUM NoPE+ALiBi — rows flagged ``is_sum_q`` score a second (q_nope,
+  k_nope) stream with the ALiBi distance bias instead of the RoPE'd
+  stream, fused as a second matmul on the same tiles;
+* GQA head groups and MLA ``Dv != Dqk`` — value tiles block on ``Dv``,
+  score tiles on ``Dqk``.
+
+Queries with no attendable key (fully padded rows) produce exactly zero
+output, matching the dense path's ``any_ok`` guard. All index/flag
+operands are int32 (no sub-byte loads); scores accumulate in fp32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.windowed_attn.windowed_attn import NEG_INF
+
+# renamed TPUCompilerParams -> CompilerParams across jax versions
+_CompilerParams = (getattr(pltpu, "CompilerParams", None)
+                   or pltpu.TPUCompilerParams)
+
+
+class DecodeStatics(NamedTuple):
+    """Hashable per-call configuration of the decode kernel."""
+    window: int          # 0 = unlimited (decode convention)
+    scale: float
+    block: int           # kv block size (divides the padded capacity)
+    use_seg: bool        # in-burst candidate isolation active
+    use_nope: bool       # SUM rows score the NoPE+ALiBi stream
+    interpret: bool
+
+
+def _kernel(pos_q_ref, pos_k_ref, sum_q_ref, seg_q_ref, seg_k_ref, alibi_ref,
+            q_ref, k_ref, v_ref, qn_ref, kn_ref,
+            o_ref,
+            m_ref, l_ref, acc_ref,
+            *, n_kv: int, window: int, scale: float,
+            use_seg: bool, use_nope: bool):
+    ikv = pl.program_id(2)
+
+    @pl.when(ikv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos_k = pos_k_ref[0]                                   # (blk,) int32
+
+    # occupancy skip: an all-empty cache block (padding, or capacity the
+    # row never reached) contributes nothing — skip its matmuls entirely
+    @pl.when(jnp.any(pos_k >= 0))
+    def _block():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)          # (s, Dqk)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)          # (blk, Dqk)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+
+        pos_q = pos_q_ref[0]                               # (s,) int32
+        d = pos_q[:, None] - pos_k[None, :]                # (s, blk)
+        if use_nope:
+            qn = qn_ref[0, :, 0, :].astype(jnp.float32)
+            kn = kn_ref[0, :, 0, :].astype(jnp.float32)
+            sn = jax.lax.dot_general(qn, kn, (((1,), (1,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+            sn = sn * scale - alibi_ref[0] * d.astype(jnp.float32)
+            s = jnp.where((sum_q_ref[0] != 0)[:, None], sn, s)
+
+        # mask: filled slot + causal (+ window) (+ in-burst segment)
+        mask = (pos_k >= 0)[None, :] & (d >= 0)
+        if window > 0:
+            mask &= d <= window
+        if use_seg:
+            seg_k = seg_k_ref[0]
+            mask &= ((seg_k < 0)[None, :]
+                     | (seg_k[None, :] == seg_q_ref[0][:, None]))
+        s = jnp.where(mask, s, NEG_INF)
+
+        # online softmax across the kv blocks
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        w = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        l_ref[:, 0] = l_ref[:, 0] * alpha + jnp.sum(w, axis=-1)
+        m_ref[:, 0] = m_new
+
+        v = v_ref[0, :, 0, :].astype(jnp.float32)          # (blk, Dv)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            w, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+
+    @pl.when(ikv == n_kv - 1)
+    def _finish():
+        l = l_ref[:, 0]
+        safe = jnp.where(l > 0, l, 1.0)
+        # rows with no attendable key output exactly 0 (dense any_ok guard)
+        o_ref[0, :, 0, :] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def _pad_cap(x: jax.Array, cap_pad: int, fill) -> jax.Array:
+    """Pad the capacity axis (axis 1) of a cache-side operand to cap_pad."""
+    cap = x.shape[1]
+    if cap == cap_pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[1] = (0, cap_pad - cap)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def prepare_decode_inputs(
+    q: jax.Array,                 # (B, s, H, Dqk)   RoPE'd queries
+    k: jax.Array,                 # (B, cap, Hk, Dqk) read-time-RoPE'd keys
+    v: jax.Array,                 # (B, cap, Hk, Dv)
+    pos_q: jax.Array,             # (B, s) int32
+    pos_k: jax.Array,             # (B, cap) int32; -1 = empty slot
+    *,
+    window: int,
+    sum_q: Optional[jax.Array],
+    seg_q: Optional[jax.Array],
+    seg_k: Optional[jax.Array],
+    q_nope: Optional[jax.Array],
+    k_nope: Optional[jax.Array],
+    alibi: Optional[jax.Array],
+    scale: Optional[float],
+    block_size: int,
+    interpret: bool,
+) -> Tuple[DecodeStatics, Tuple[jax.Array, ...]]:
+    """Normalise optional operands to concrete arrays + hashable statics.
+
+    Pads the capacity axis to a multiple of the kv block (padding slots
+    carry ``pos = -1`` so the occupancy skip drops them for free) — the
+    scheduler's ``capacity = ctx + bucket`` need not be block-aligned.
+    """
+    b, s_len, h, d = q.shape
+    cap = k.shape[1]
+    if scale is None:
+        scale = d ** -0.5
+    # unlike choose_block (which degrades towards gcd -> 1 on ragged
+    # lengths), pad the cache operands up to a block multiple: the
+    # scheduler's capacity is arbitrary and padding slots are skipped
+    blk = min(block_size, cap)
+    cap_pad = ((cap + blk - 1) // blk) * blk
+
+    use_nope = q_nope is not None and sum_q is not None
+    use_seg = seg_q is not None and seg_k is not None
+    i32 = functools.partial(jnp.asarray, dtype=jnp.int32)
+    sum_q_i = i32(sum_q if sum_q is not None else jnp.zeros((b, s_len)))
+    seg_q_i = i32(seg_q if use_seg else jnp.zeros((b, s_len)))
+    seg_k_i = i32(seg_k if use_seg else jnp.zeros((b, cap)))
+    alibi_f = (alibi if alibi is not None
+               else jnp.zeros((h,))).astype(jnp.float32)
+    # without the NoPE stream the kernel never reads qn/kn: stage single-
+    # element placeholders (their BlockSpecs shrink to match) instead of a
+    # full-capacity zero tensor per layer per step
+    qn = q_nope if use_nope else jnp.zeros((b, 1, 1, 1), q.dtype)
+    kn = k_nope if use_nope else jnp.zeros((b, 1, 1, 1), k.dtype)
+
+    arrays = (pos_q.astype(jnp.int32),
+              _pad_cap(pos_k.astype(jnp.int32), cap_pad, -1),
+              sum_q_i, seg_q_i, _pad_cap(seg_k_i, cap_pad, -1),
+              alibi_f, q, _pad_cap(k, cap_pad, 0), _pad_cap(v, cap_pad, 0),
+              qn, _pad_cap(kn, cap_pad, 0) if use_nope else kn)
+    st = DecodeStatics(window=int(window), scale=float(scale), block=blk,
+                       use_seg=use_seg, use_nope=use_nope,
+                       interpret=bool(interpret))
+    return st, arrays
+
+
+def decode_attention_bshd(st: DecodeStatics, pos_q, pos_k, sum_q, seg_q,
+                          seg_k, alibi, q, k, v, qn, kn) -> jax.Array:
+    """Normalised forward over prepared operands: returns o (B, s, H, Dv)."""
+    b, s_len, h, d = q.shape
+    cap = k.shape[1]
+    hk = k.shape[2]
+    dv = v.shape[-1]
+    n_rep = h // hk
+    blk = st.block
+    assert cap % blk == 0, f"cap={cap} not divisible by block {blk}"
+    n_kv = cap // blk
+
+    def q_idx(bi, hi, ki):
+        return (bi, 0, hi, 0)
+
+    def kv_idx(bi, hi, ki):
+        return (bi, ki, hi // n_rep, 0)
+
+    def kvh_idx(bi, hi, ki):              # for (B, cap, 1, D) nope caches
+        return (bi, ki, 0, 0)
+
+    one = lambda bi, hi, ki: (bi, 0, 0, 0)    # single-element placeholders
+    qn_map = q_idx if st.use_nope else one
+    kn_map = one if not st.use_nope else (
+        kv_idx if kn.shape[2] == hk else kvh_idx)
+    qn_spec = ((1, s_len, 1, qn.shape[-1]) if st.use_nope else (1, 1, 1, 1))
+    kn_spec = ((1, blk, 1, kn.shape[-1]) if st.use_nope else (1, 1, 1, 1))
+
+    grid = (b, h, n_kv)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_kv=n_kv, window=st.window,
+                          scale=st.scale, use_seg=st.use_seg,
+                          use_nope=st.use_nope),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, s_len), lambda bi, hi, ki: (bi, 0)),   # pos_q
+            pl.BlockSpec((1, blk), lambda bi, hi, ki: (bi, ki)),    # pos_k
+            pl.BlockSpec((1, s_len), lambda bi, hi, ki: (bi, 0)),   # sum_q
+            pl.BlockSpec((1, s_len), lambda bi, hi, ki: (bi, 0)),   # seg_q
+            pl.BlockSpec((1, blk), lambda bi, hi, ki: (bi, ki)),    # seg_k
+            pl.BlockSpec((1,), lambda bi, hi, ki: (hi,)),           # alibi
+            pl.BlockSpec((1, s_len, 1, d), q_idx),                  # q
+            pl.BlockSpec((1, blk, 1, d), kv_idx),                   # k
+            pl.BlockSpec((1, blk, 1, dv), kv_idx),                  # v
+            pl.BlockSpec(qn_spec, qn_map),                          # qn
+            pl.BlockSpec(kn_spec, kn_map),                          # kn
+        ],
+        out_specs=pl.BlockSpec((1, s_len, 1, dv), q_idx),
+        out_shape=jax.ShapeDtypeStruct((b, s_len, h, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((s_len, 1), jnp.float32),      # m (row max)
+            pltpu.VMEM((s_len, 1), jnp.float32),      # l (row denom)
+            pltpu.VMEM((s_len, dv), jnp.float32),     # acc (value accum)
+        ],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=st.interpret,
+    )(pos_q, pos_k, sum_q, seg_q, seg_k, alibi, q, k, v, qn, kn)
+    return out
+
+
+__all__ = ["DecodeStatics", "prepare_decode_inputs", "decode_attention_bshd"]

@@ -1,0 +1,66 @@
+"""Public decode-attention op: cache-layout operands, custom Pallas lowering.
+
+``decode_attention`` is the serving analogue of
+``repro.kernels.windowed_attn.ops.windowed_attention``: it normalises the
+optional serve operands (SUM flags, in-burst segments, NoPE stream) to
+concrete arrays plus hashable statics and lowers to the fused Pallas
+kernel in ``decode_attn.py``. Differences from the training op:
+
+* operands stay in the serving cache layout — queries ``(B, s, H, Dqk)``,
+  cache-side tensors ``(B, cap, Hk, D)`` — and the index maps do the GQA
+  head-group addressing, so no transposes or head replication happen in
+  memory;
+* no VJP: decode never trains, so the op is forward-only (scores are read
+  under ``jax.lax.stop_gradient`` semantics by construction);
+* the capacity axis is padded to a kv-block multiple with ``pos = -1``
+  slots, which the kernel's occupancy skip drops — arbitrary scheduler
+  capacities stay legal without degrading the block size.
+
+``interpret=None`` auto-resolves via ``repro.kernels.default_interpret``
+(Mosaic on TPU, the Pallas interpreter elsewhere so the kernel *body* is
+what CPU tests exercise).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.kernels import default_interpret
+from repro.kernels.decode_attn.decode_attn import (
+    decode_attention_bshd, prepare_decode_inputs)
+
+
+def decode_attention(
+    q: jax.Array,                  # (B, s, H, Dqk)   RoPE'd queries
+    k: jax.Array,                  # (B, cap, Hk, Dqk) read-time-RoPE'd keys
+    v: jax.Array,                  # (B, cap, Hk, Dv)
+    pos_q: jax.Array,              # (B, s) int32 query positions
+    pos_k: jax.Array,              # (B, cap) int32 slot positions; -1 empty
+    *,
+    window: int,                   # 0 = unlimited (decode convention)
+    is_sum_q: Optional[jax.Array] = None,   # (B, s) flags
+    q_nope: Optional[jax.Array] = None,     # (B, s, H, Dqk)
+    k_nope: Optional[jax.Array] = None,     # (B, cap, Hk, Dqk) unroped
+    alibi: Optional[jax.Array] = None,      # (H,) f32
+    seg_q: Optional[jax.Array] = None,      # (B, s) int32; -1 = shared
+    seg_k: Optional[jax.Array] = None,      # (B, cap) int32; -1 = shared
+    scale: Optional[float] = None,
+    block_size: int = 64,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Fused burst attention into the batched KV cache -> (B, s, H, Dv)."""
+    interpret = default_interpret(interpret)
+    use_nope = q_nope is not None and is_sum_q is not None
+    st, arrays = prepare_decode_inputs(
+        q, k, v, pos_q, pos_k, window=window,
+        sum_q=is_sum_q if use_nope else None,
+        seg_q=seg_q, seg_k=seg_k,
+        q_nope=q_nope if use_nope else None,
+        k_nope=k_nope if use_nope else None,
+        alibi=alibi if use_nope else None,
+        scale=scale, block_size=block_size, interpret=interpret)
+    return decode_attention_bshd(st, *arrays)
+
+
+__all__ = ["decode_attention"]

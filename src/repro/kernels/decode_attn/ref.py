@@ -1,0 +1,84 @@
+"""Dense reference for the decode-attention kernel.
+
+Mirrors the serving engine's dense decode math (`repro.serve.engine`:
+``_decode_mask`` + ``_decode_attend``) on the kernel's operand layout so
+`tests/test_decode_attn.py` can assert kernel == oracle without standing
+up a full model. Semantics:
+
+* attendable iff the cache slot is filled (``pos_k >= 0``), causal
+  (``pos_q >= pos_k``), within ``window`` when ``window > 0`` (0 =
+  unlimited — the decode convention), and segment-compatible
+  (``seg_k < 0`` shared, else ``seg_k == seg_q``);
+* rows flagged ``sum_q`` replace the RoPE scores with the NoPE stream
+  minus ``alibi * distance``;
+* rows with no attendable key output exactly zero.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.windowed import NEG_INF
+
+
+def decode_attention_ref(
+    q: jax.Array,                  # (B, s, H, Dqk)
+    k: jax.Array,                  # (B, cap, Hk, Dqk)
+    v: jax.Array,                  # (B, cap, Hk, Dv)
+    pos_q: jax.Array,              # (B, s) int32
+    pos_k: jax.Array,              # (B, cap) int32; -1 = empty
+    *,
+    window: int,
+    sum_q: Optional[jax.Array] = None,
+    seg_q: Optional[jax.Array] = None,
+    seg_k: Optional[jax.Array] = None,
+    q_nope: Optional[jax.Array] = None,
+    k_nope: Optional[jax.Array] = None,
+    alibi: Optional[jax.Array] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    b, s, h, d = q.shape
+    hk = k.shape[2]
+    n_rep = h // hk
+    if scale is None:
+        scale = d ** -0.5
+
+    def rep(t):                    # (B, cap, Hk, D) -> (B, cap, H, D)
+        if n_rep == 1:
+            return t
+        bb, cap, _, dd = t.shape
+        return jnp.broadcast_to(
+            t[:, :, :, None, :], (bb, cap, hk, n_rep, dd)
+        ).reshape(bb, cap, h, dd)
+
+    sc = jnp.einsum("bshd,bkhd->bhsk", q, rep(k),
+                    preferred_element_type=jnp.float32) * scale
+    dist = (pos_q[:, None, :, None] - pos_k[:, None, None, :]
+            ).astype(jnp.float32)
+    if q_nope is not None and sum_q is not None:
+        kn = k_nope if k_nope.shape[2] == hk else jnp.broadcast_to(
+            k_nope, (b, k.shape[1], hk, k_nope.shape[-1]))
+        sn = jnp.einsum("bshd,bkhd->bhsk", q_nope, rep(kn),
+                        preferred_element_type=jnp.float32) * scale
+        sn = sn - alibi[None, :, None, None] * dist
+        sc = jnp.where(sum_q[:, None, :, None], sn, sc)
+
+    mask = ((pos_k[:, None, :] >= 0)
+            & (pos_q[:, :, None] >= pos_k[:, None, :]))
+    if window > 0:
+        mask &= (pos_q[:, :, None] - pos_k[:, None, :]) <= window
+    if seg_q is not None and seg_k is not None:
+        mask &= ((seg_k[:, None, :] < 0)
+                 | (seg_k[:, None, :] == seg_q[:, :, None]))
+
+    sc = jnp.where(mask[:, None, :, :], sc, NEG_INF)
+    probs = jax.nn.softmax(sc, axis=-1)
+    any_ok = jnp.any(mask, axis=-1)[:, None, :, None]
+    probs = jnp.where(any_ok, probs, 0.0)
+    out = jnp.einsum("bhsk,bkhd->bshd", probs.astype(q.dtype), rep(v))
+    return out
+
+
+__all__ = ["decode_attention_ref"]

@@ -1,7 +1,9 @@
-"""repro.serve — serving: prefill + decode engine, GQA/MLA/ring KV caches,
-multi-target scoring and the continuous-batching scheduler (docs/serving.md)."""
+"""repro.serve — serving: prefill + decode engine (dense or fused Pallas
+decode attention), refcounted GQA/MLA/ring KV caches, multi-target scoring
+and the continuous-batching scheduler with cross-request prefix sharing
+(docs/serving.md)."""
 from repro.serve.cache import (Cache, cache_shape, free_slots, init_lm_cache,
-                               slot_indices)
+                               retain_slots, slot_indices, trim_slots)
 from repro.serve.engine import (CTRServer, make_decode_fn,
                                 make_multi_target_prefill_fn, make_prefill_fn)
 from repro.serve.scheduler import RequestResult, ServeScheduler

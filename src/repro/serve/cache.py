@@ -1,9 +1,10 @@
-"""Decode KV caches: full-length and ring-buffer (windowed), GQA and MLA.
+"""Decode KV caches: full-length and ring-buffer (windowed), GQA and MLA,
+with refcounted context blocks for cross-request prefix sharing.
 
 Layout: per-layer tensors are stacked on a leading L dim so the decode step
 can ``lax.scan`` over (layer params, layer cache) — HLO stays O(1) in depth.
-Slot bookkeeping (``pos``, ``cursor``) is shared across layers (every layer
-writes the same slots).
+Slot bookkeeping (``pos``, ``cursor``, ``ref``) is shared across layers
+(every layer writes the same slots).
 
 * GQA cache: k/v per head — ``k (L, B, cap, Hk, dk)``, ``v (L, B, cap, Hk, dv)``.
 * MLA cache: the **latent** per token — ``ckv (L, B, cap, r_kv)``,
@@ -16,6 +17,17 @@ position — the windowed causal attention the paper trains with guarantees no
 query ever needs a key older than ``window``, so ``long_500k`` decode is
 O(window) in both memory and FLOPs. ``ring`` is static (baked into the
 jitted step), not a traced value.
+
+Refcounted context blocks (``ref (B,)``): a row's committed prefix (the
+tokens at slots ``0..cursor-1``) is a *context block* that more than one
+request may score bursts against — cross-request prefix sharing, see
+``repro.serve.scheduler`` and docs/serving.md. ``retain_slots`` takes a
+reference on a row, ``free_slots`` drops one; a row's ``pos``/``cursor``
+reset only when its last reference is dropped. The invariant the scheduler
+maintains is ``ref[row] == (#active requests on the row) + (1 if the row's
+context is retained for future reuse else 0)`` — so a finished request's
+context survives eviction exactly as long as something (an in-flight
+sharer, or the retention policy) still holds a reference.
 """
 from __future__ import annotations
 
@@ -25,6 +37,20 @@ import jax.numpy as jnp
 
 from repro.models.transformer import ModelConfig
 
+#: A decode cache is a flat dict pytree. Per-layer KV tensors are stacked
+#: on a leading layer dim (``k``/``v`` for GQA, ``ckv``/``kpe`` for MLA);
+#: three per-row bookkeeping arrays are shared by every layer:
+#:
+#: * ``pos (B, cap) int32``    — the logical position held by each physical
+#:   slot; ``-1`` marks an empty/unreachable slot (never attendable). This
+#:   is the single source of truth for attendability — KV bytes are never
+#:   cleared, they become unreachable via ``pos = -1`` and are overwritten
+#:   by the next occupant.
+#: * ``cursor (B,) int32``     — the next physical slot a committed write
+#:   lands in (equivalently: the row's committed context length when the
+#:   cache is not a ring).
+#: * ``ref (B,) int32``        — reference count on the row's committed
+#:   context block (see module docstring).
 Cache = Dict[str, Any]
 
 
@@ -44,6 +70,7 @@ def init_lm_cache(cfg: ModelConfig, batch: int, capacity: int,
         }
     tensors["pos"] = jnp.full((batch, capacity), -1, jnp.int32)
     tensors["cursor"] = jnp.zeros((batch,), jnp.int32)
+    tensors["ref"] = jnp.zeros((batch,), jnp.int32)
     return tensors
 
 
@@ -62,17 +89,65 @@ def slot_indices(cache: Cache, s_new: int, *, ring: bool):
     return idx % cap if ring else idx
 
 
-def free_slots(cache: Cache, mask) -> Cache:
-    """Reset the batch rows selected by ``mask`` (B,) bool: position buffer
-    to -1 (nothing attendable), cursor to 0. KV bytes are left in place —
-    pos -1 already makes them unreachable and the next occupant overwrites
-    them — so eviction/admission is O(B·cap) int32 work, no KV traffic.
-    Used by the continuous-batching scheduler when a request completes and
-    its slot is re-admitted."""
-    pos = jnp.where(mask[:, None], -1, cache["pos"])
-    cursor = jnp.where(mask, 0, cache["cursor"])
+def retain_slots(cache: Cache, counts) -> Cache:
+    """Take references on rows: ``counts`` is (B,) bool (one reference per
+    True row) or int32 (that many references per row — several requests
+    admitted onto one row in the same scheduling wave).
+
+    Each reference is one reason the row's committed context must stay
+    readable: an active request scoring bursts against it, or the
+    scheduler retaining a finished request's context for future prefix
+    reuse. Purely int32 bookkeeping — no KV traffic.
+    """
+    return dict(cache, ref=cache["ref"] + counts.astype(jnp.int32))
+
+
+def free_slots(cache: Cache, counts) -> Cache:
+    """Drop references on rows — ``counts`` is (B,) bool or int32, as in
+    ``retain_slots`` — and reset the touched rows whose count reaches
+    zero.
+
+    With prefix sharing a row's committed context may be in use by several
+    requests (and/or retained for reuse), so freeing **decrements** instead
+    of unconditionally resetting: only when the last reference is dropped
+    does the row's position buffer go to -1 (nothing attendable) and its
+    cursor to 0. KV bytes are left in place even then — ``pos = -1``
+    already makes them unreachable and the next occupant overwrites them —
+    so eviction/admission stays O(B·cap) int32 work, no KV traffic.
+
+    A ``free_slots`` on a zero-ref row (the pre-sharing idiom: "reset this
+    row now") still resets it: the count saturates at zero rather than
+    going negative. Used by the continuous-batching scheduler when a
+    request completes, when a retained context is stolen for a new
+    admission, and on (re-)admission of rows the legacy way.
+    """
+    counts = counts.astype(jnp.int32)
+    ref = cache["ref"] - counts
+    reset = (counts > 0) & (ref <= 0)
+    pos = jnp.where(reset[:, None], -1, cache["pos"])
+    cursor = jnp.where(reset, 0, cache["cursor"])
+    return dict(cache, pos=pos, cursor=cursor, ref=jnp.maximum(ref, 0))
+
+
+def trim_slots(cache: Cache, mask, keep) -> Cache:
+    """Roll the rows selected by ``mask`` (B,) bool back to their first
+    ``keep`` (B,) int32 committed tokens.
+
+    Used when a retained context is reused by a request that shares only a
+    *proper* prefix: slots at physical index >= ``keep`` become
+    unreachable (``pos = -1``) and the cursor drops to ``keep``, so the
+    next committed write extends the shared prefix. Only valid on rows
+    with no active readers (the scheduler trims retained rows only) and on
+    non-ring caches, where physical index == committed order.
+    """
+    cap = cache["pos"].shape[1]
+    idx = jnp.arange(cap, dtype=jnp.int32)[None]
+    drop = mask[:, None] & (idx >= keep[:, None])
+    pos = jnp.where(drop, -1, cache["pos"])
+    cursor = jnp.where(mask, jnp.minimum(cache["cursor"], keep),
+                       cache["cursor"])
     return dict(cache, pos=pos, cursor=cursor)
 
 
 __all__ = ["Cache", "init_lm_cache", "cache_shape", "slot_indices",
-           "free_slots"]
+           "retain_slots", "free_slots", "trim_slots"]

@@ -42,6 +42,7 @@ import jax.numpy as jnp
 
 from repro.core.losses import ctr_logits
 from repro.core.windowed import NEG_INF
+from repro.kernels.decode_attn.ops import decode_attention
 from repro.models.layers import alibi_slopes, apply_rope, dense, rmsnorm
 from repro.models.moe import moe_ffn
 from repro.models.transformer import ModelConfig, forward
@@ -147,7 +148,8 @@ def _decode_attend(scores_rope, scores_nope, alibi, d, mask, is_sum_q, v_agg):
 
 def _gqa_decode_layer(lp: Params, h, kc, vc, *, cfg: ModelConfig, slots,
                       pos_buf, positions, is_sum, window, kind,
-                      seg_q=None, seg_buf=None):
+                      seg_q=None, seg_buf=None, impl="dense",
+                      block_size=64, interpret=None):
     b, s, _ = h.shape
     hq, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     n_rep = hq // hk
@@ -164,6 +166,24 @@ def _gqa_decode_layer(lp: Params, h, kc, vc, *, cfg: ModelConfig, slots,
 
     q_rope = apply_rope(q, positions, cfg.rope_theta)
     k_rope = _rope_read(kc, pos_buf, cfg.rope_theta)
+    scale = hd ** -0.5
+
+    if impl == "pallas":
+        # fused burst attention into the cache: the kernel reads the cache
+        # layout directly (GQA via index maps), applies every mask term via
+        # index arithmetic and keeps the softmax online — no (B,H,s,cap)
+        # score/prob tensors, empty cache blocks skipped
+        nope = cfg.dti_sum_alibi
+        out = decode_attention(
+            q_rope, k_rope, vc, positions, pos_buf, window=window,
+            is_sum_q=is_sum if nope else None,
+            q_nope=q if nope else None, k_nope=kc if nope else None,
+            alibi=alibi_slopes(hq) if nope else None,
+            seg_q=seg_q, seg_k=seg_buf, scale=scale,
+            block_size=block_size, interpret=interpret).astype(h.dtype)
+        h = h + dense(lp["attn"]["o"], out.reshape(b, s, hq * hd))
+        h, aux = _ffn(lp, h, cfg, kind)
+        return h, kc, vc, aux
 
     def rep(t):  # (B, cap, Hk, D) -> (B, cap, Hq, D)
         if n_rep == 1:
@@ -172,7 +192,6 @@ def _gqa_decode_layer(lp: Params, h, kc, vc, *, cfg: ModelConfig, slots,
         return jnp.broadcast_to(t[:, :, :, None, :],
                                 (bb, cap, hk, n_rep, dd)).reshape(bb, cap, hq, dd)
 
-    scale = hd ** -0.5
     sc_rope = jnp.einsum("bshd,bkhd->bhsk", q_rope, rep(k_rope),
                          preferred_element_type=jnp.float32) * scale
     sc_nope = None
@@ -193,7 +212,8 @@ def _gqa_decode_layer(lp: Params, h, kc, vc, *, cfg: ModelConfig, slots,
 
 def _mla_decode_layer(lp: Params, h, ckv_c, kpe_c, *, cfg: ModelConfig,
                       slots, pos_buf, positions, is_sum, window, kind,
-                      seg_q=None, seg_buf=None):
+                      seg_q=None, seg_buf=None, impl="dense",
+                      block_size=64, interpret=None):
     """Absorbed-MLA decode: scores and values against the latent cache."""
     b, s, _ = h.shape
     hq = cfg.n_heads
@@ -226,6 +246,30 @@ def _mla_decode_layer(lp: Params, h, ckv_c, kpe_c, *, cfg: ModelConfig,
     kpe_rope = _rope_read(kpe_c[:, :, None, :], pos_buf,
                           cfg.rope_theta)[:, :, 0, :]               # (B,cap,dr)
     scale = (dn + dr) ** -0.5
+
+    if impl == "pallas":
+        # absorbed MLA as MQA for the fused kernel (Hk=1): concatenate the
+        # latent and rope streams so one score matmul covers both terms —
+        # q_eff . k_eff == q_abs . ckv + q_pe_rope . kpe_rope — and keep
+        # values in the latent (Dv = r_kv != Dqk); W_UV folds after.
+        q_eff = jnp.concatenate([q_abs, q_pe_rope], axis=-1)
+        k_eff = jnp.concatenate([ckv_c, kpe_rope], axis=-1)[:, :, None, :]
+        nope = cfg.dti_sum_alibi
+        qn_eff = (jnp.concatenate([q_abs, q_pe], axis=-1) if nope else None)
+        kn_eff = (jnp.concatenate([ckv_c, kpe_c], axis=-1)[:, :, None, :]
+                  if nope else None)
+        o_lat = decode_attention(
+            q_eff, k_eff, ckv_c[:, :, None, :], positions, pos_buf,
+            window=window, is_sum_q=is_sum if nope else None,
+            q_nope=qn_eff, k_nope=kn_eff,
+            alibi=alibi_slopes(hq) if nope else None,
+            seg_q=seg_q, seg_k=seg_buf, scale=scale,
+            block_size=block_size, interpret=interpret)
+        out = jnp.einsum("bshr,rhd->bshd", o_lat.astype(h.dtype), w_uv)
+        h = h + dense(ap["o"], out.reshape(b, s, hq * dv))
+        h, aux = _ffn(lp, h, cfg, kind)
+        return h, ckv_c, kpe_c, aux
+
     sc_rope = (jnp.einsum("bshr,bkr->bhsk", q_abs, ckv_c,
                           preferred_element_type=jnp.float32)
                + jnp.einsum("bshd,bkd->bhsk", q_pe_rope, kpe_rope,
@@ -265,9 +309,29 @@ def _ffn(lp: Params, h, cfg: ModelConfig, kind: str):
 
 
 def make_decode_fn(cfg: ModelConfig, *, window: int, ring: bool,
-                   yes_id: int = 3, no_id: int = 4) -> Callable:
+                   yes_id: int = 3, no_id: int = 4,
+                   attn_impl: Optional[str] = None,
+                   block_size: int = 64,
+                   interpret: Optional[bool] = None) -> Callable:
     """(params, cache, tokens (B,s), positions (B,s), is_sum (B,s)[,
     valid (B,s), commit (B,), seg (B,s)]) -> (p_click (B, s), new_cache).
+
+    ``attn_impl`` selects the per-layer attention path:
+
+    * ``"dense"``  — masked einsums over the full cache capacity (the
+      semantic oracle; also the fallback when ``attn_impl=None`` and the
+      model config doesn't train on the kernel path).
+    * ``"pallas"`` — the fused decode-attention kernel
+      (``repro.kernels.decode_attn``): one online-softmax pass over the
+      cache with every serve mask term fused, occupancy-skipping empty
+      cache blocks. Covers the full operand set below (valid/commit/seg),
+      GQA and absorbed MLA, ring and windowed caches.
+    * ``None``     — inherit the model's training-time choice:
+      ``"pallas"`` when ``cfg.attn_impl == "pallas"``, else ``"dense"``
+      (so a config that trains on the kernel path serves on it too).
+
+    ``block_size``/``interpret`` tune the kernel path only (interpret
+    auto-resolves off-TPU, see ``repro.kernels.default_interpret``).
 
     The three optional operands are what the continuous-batching scheduler
     (repro.serve.scheduler) runs on:
@@ -292,6 +356,9 @@ def make_decode_fn(cfg: ModelConfig, *, window: int, ring: bool,
     mla = cfg.attn_type == "mla"
     keys = ("ckv", "kpe") if mla else ("k", "v")
     layer_fn = _mla_decode_layer if mla else _gqa_decode_layer
+    if attn_impl is None:
+        attn_impl = "pallas" if cfg.attn_impl == "pallas" else "dense"
+    assert attn_impl in ("dense", "pallas"), f"unknown decode attn_impl {attn_impl!r}"
 
     def decode(params: Params, cache: Cache, tokens: jax.Array,
                positions: jax.Array, is_sum: jax.Array,
@@ -348,7 +415,8 @@ def make_decode_fn(cfg: ModelConfig, *, window: int, ring: bool,
                 hh, ca, cb, aux = layer_fn(
                     lp, hc, ca, cb, cfg=cfg, slots=slots, pos_buf=pos_buf,
                     positions=positions, is_sum=is_sum, window=window,
-                    kind=kind, seg_q=seg, seg_buf=seg_buf)
+                    kind=kind, seg_q=seg, seg_buf=seg_buf, impl=attn_impl,
+                    block_size=block_size, interpret=interpret)
                 ca_full = jax.lax.dynamic_update_index_in_dim(
                     ca_full, ca.astype(ca_full.dtype), li, 0)
                 cb_full = jax.lax.dynamic_update_index_in_dim(

@@ -1,4 +1,5 @@
-"""Continuous-batching CTR serving with shared-context KV reuse.
+"""Continuous-batching CTR serving with shared-context KV reuse and
+cross-request prefix sharing.
 
 The paper's training trick — isolate k targets against one shared context
 instead of re-encoding the context k times — applied at inference. A request
@@ -16,16 +17,31 @@ scheduler:
      (the decode-side analog of the training paradigm's k isolated
      targets), so a whole slate usually costs one decode step.
 
+On top of the per-request reuse, **cross-request prefix sharing** reuses
+context KV *between* requests (``share_prefix=True``): committed context
+blocks are refcounted (`repro.serve.cache`), indexed by a context-hash
+trie (`repro.data.requests.ContextTrie`), and retained after their request
+finishes instead of being freed. Admission matches an incoming context
+against the trie and reuses the best block — see ``_try_place`` for the
+exact policy ladder. Two users with a common context prefix (or one user
+paging through result slates) then share one KV copy; step 1 shrinks to
+the unshared suffix, or disappears entirely.
+
 Continuous batching: a fixed-capacity batched cache (``n_slots`` rows x
-``capacity`` token slots); requests are admitted into free rows as they
-arrive and evicted the moment their last candidate is scored, so short
-requests never wait for long ones. Every step feeds one work unit per busy
-row, right-padded to a fixed bucket length — the jitted decode step only
-ever sees ``len(buckets)`` shapes, so steady-state serving never recompiles.
+``capacity`` token slots); requests are admitted into rows as they arrive
+and a row returns to the reusable pool the moment its last candidate is
+scored, so short requests never wait for long ones. Every step feeds one
+work unit per busy row, right-padded to a fixed bucket length — the jitted
+decode step only ever sees ``len(buckets)`` shapes, so steady-state serving
+never recompiles. ``attn_impl="pallas"`` runs every step through the fused
+decode-attention kernel (`repro.kernels.decode_attn`) instead of the dense
+einsums.
 
 Cost: per request O(n^2 + k·n·s) attention reads instead of the O(k·n^2) of
-re-prefilling the context per candidate; ``RequestResult.cached_tokens``
-tracks the prompt tokens served from the shared cache instead of recomputed.
+re-prefilling the context per candidate — less again whatever prefix
+sharing removes; ``RequestResult.cached_tokens`` tracks the prompt tokens
+served from cache (own-context reuse + shared prefixes) instead of
+recomputed.
 """
 from __future__ import annotations
 
@@ -39,8 +55,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dti import SpecialTokens
+from repro.data.requests import ContextTrie
 from repro.models.transformer import ModelConfig
-from repro.serve.cache import free_slots, init_lm_cache
+from repro.serve.cache import (free_slots, init_lm_cache, retain_slots,
+                               trim_slots)
 from repro.serve.engine import make_decode_fn
 
 
@@ -49,15 +67,22 @@ class RequestResult:
     rid: int
     scores: List[float]                # p(click) per candidate, in order
     latency_s: float                   # submit -> last candidate scored
-    context_tokens: int                # tokens prefilled once (incl. BOS)
-    burst_tokens: int                  # candidate+[SUM] tokens scored
-    cached_tokens: int                 # context re-encodes avoided: (k-1)*n
+    context_tokens: int                # logical context length n (incl. BOS)
+    prefill_tokens: int                # context tokens this request committed
+    burst_tokens: int                  # tokens fed in non-committing bursts
+                                       # (candidates + [SUM] + suffix copies)
+    shared_prefix_tokens: int          # context prefix reused from another
+                                       # request's committed block
+    cached_tokens: int                 # logical prompt tokens served from
+                                       # cache: logical - (prefill + burst)
     logical_tokens: int                # what k independent prefills compute
 
     @property
     def cache_hit_fraction(self) -> float:
         """Fraction of the logical prompt tokens (k x context+candidate)
-        that were read from the shared-context cache instead of recomputed."""
+        that were read from cache instead of recomputed — own-context
+        reuse across the k candidates plus any cross-request shared
+        prefix."""
         return self.cached_tokens / max(self.logical_tokens, 1)
 
 
@@ -75,31 +100,76 @@ class _Unit:
 
 @dataclasses.dataclass
 class _Slot:
+    """One in-flight request (possibly one of several sharing a row)."""
     rid: int
-    units: deque
+    row: int
+    units: deque                       # its remaining _Units, FIFO
     scores: List[Optional[float]]
     submit_t: float
-    context_tokens: int
-    burst_tokens: int
+    n_context: int                     # logical context length n
+    prefill_tokens: int
+    burst_tokens: int                  # all non-commit feeds (suffix copies
+                                       # included)
+    slate_tokens: int                  # sum(len(cand) + 1) — the logical
+                                       # candidate+[SUM] feed
+    shared_prefix_tokens: int
     n_candidates: int
+
+
+@dataclasses.dataclass
+class _Row:
+    """Host-side state of one cache row (one batch index of the KV cache).
+
+    ``committed`` is the row's context block — the token sequence whose KV
+    occupies slots ``0..len-1`` once ``pending_commit`` reaches 0 (commit
+    units still queued/running are counted there; a row is *sharable* only
+    at ``pending_commit == 0``, enforced by ``_try_place``). ``active``
+    are the requests currently scoring bursts against the block;
+    ``retained`` marks an inactive row whose block is kept (and
+    refcounted) for future prefix reuse. The cache-side refcount invariant
+    is ``ref == len(active) + retained``.
+    """
+    committed: List[int] = dataclasses.field(default_factory=list)
+    pending_commit: int = 0
+    active: List[_Slot] = dataclasses.field(default_factory=list)
+    retained: bool = False
+    stale: bool = False                # KV predates a weight swap: keep
+                                       # serving in-flight readers, never
+                                       # share with or retain for new ones
+    last_used: int = 0                 # step counter, for LRU steal
+    rr: int = 0                        # round-robin pointer over active
 
 
 class ServeScheduler:
     """Continuous-batching multi-target CTR scorer.
 
     ``submit`` enqueues a request (context = per-interaction token lists,
-    candidates = per-candidate token lists); ``run`` drains queue and slots
+    candidates = per-candidate token lists); ``run`` drains queue and rows
     and returns {rid: RequestResult}. ``step`` advances one batched decode
     step (exposed for tests). The decode step is jitted once per bucket
-    length; admission/eviction are O(rows) host bookkeeping plus an int32
-    pos/cursor reset on the freed rows.
+    length; admission/eviction are O(rows) host bookkeeping plus int32
+    refcount/pos/cursor updates on the touched rows (never KV traffic).
+
+    ``share_prefix=True`` (default) enables cross-request prefix sharing:
+    finished contexts are retained and refcounted, and admission reuses
+    the longest matching committed prefix (`_try_place`). Shared requests
+    score bit-identically to unshared ones — sharing changes which cache
+    row a burst reads, never what the burst attends. ``min_shared_prefix``
+    sets the shortest prefix worth reusing (every context starts with
+    [BOS], so a floor of 1 would "share" almost nothing of value while
+    trimming away retained blocks).
+
+    ``attn_impl`` picks the decode attention path ("dense", "pallas", or
+    None = follow ``cfg.attn_impl``); see ``make_decode_fn``.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 8,
                  capacity: int = 256, window: Optional[int] = None,
                  buckets: Sequence[int] = (8, 16, 32, 64),
                  sp: SpecialTokens = SpecialTokens(),
-                 yes_id: int = 3, no_id: int = 4, cache_dtype=jnp.float32):
+                 yes_id: int = 3, no_id: int = 4, cache_dtype=jnp.float32,
+                 attn_impl: Optional[str] = None,
+                 share_prefix: bool = True, min_shared_prefix: int = 4):
         if window is None:
             window = cfg.window          # match make_prefill_fn's default
         self.params = params
@@ -108,16 +178,30 @@ class ServeScheduler:
         self.capacity = capacity
         self.buckets = tuple(sorted(buckets))
         self.sp = sp
+        self.attn_impl = attn_impl
+        self.share_prefix = share_prefix
+        self.min_shared_prefix = max(int(min_shared_prefix), 1)
+        # the cache is donated to every jitted op that rewrites it: KV
+        # tensors alias straight through (bookkeeping ops touch int32 only)
+        # instead of being copied per call — the scheduler always rebinds
+        # ``self.cache`` from the op's return, so the stale reference is
+        # never read
         self._decode = jax.jit(
             make_decode_fn(cfg, window=window, ring=False,
-                           yes_id=yes_id, no_id=no_id))
-        self._free = jax.jit(free_slots)
+                           yes_id=yes_id, no_id=no_id, attn_impl=attn_impl),
+            donate_argnums=(1,))
+        self._free = jax.jit(free_slots, donate_argnums=(0,))
+        self._retain = jax.jit(retain_slots, donate_argnums=(0,))
+        self._trim = jax.jit(trim_slots, donate_argnums=(0,))
         self.cache = init_lm_cache(cfg, n_slots, capacity, dtype=cache_dtype)
         self._queue: deque = deque()
-        self._slots: List[Optional[_Slot]] = [None] * n_slots
+        self._rows: List[_Row] = [_Row() for _ in range(n_slots)]
+        self._trie = ContextTrie()
+        self._pending = self._fresh_pending()
         self._results: Dict[int, RequestResult] = {}
         self._next_rid = 0
         self.n_steps = 0
+        self.shared_admissions = 0       # requests that reused a prefix
         self._param_source = None
         self._poll_every = 1
         self._poll_tick = 0
@@ -143,10 +227,29 @@ class ServeScheduler:
     def update_params(self, params, version: Optional[int] = None) -> None:
         """Swap serving weights in place. Params are a jit argument, so the
         bucketed decode step does not recompile; queued requests and busy
-        slots are untouched."""
+        rows are untouched.
+
+        Retained context blocks are **invalidated**: their KV encodes the
+        old weights, so sharing them with post-swap requests would score
+        fresh traffic against stale context. Idle retained blocks are
+        freed and deregistered immediately; blocks with in-flight readers
+        keep serving them (the documented mixed-version contract for
+        requests straddling a swap, docs/streaming.md) but are flagged
+        ``stale`` — never matched for new sharing, and freed instead of
+        retained when their last reader leaves."""
         self.params = params
         if version is not None:
             self.params_version = version
+        if self.share_prefix:
+            for i, r in enumerate(self._rows):
+                if not r.committed:
+                    continue
+                if r.active:
+                    r.stale = True
+                else:                              # idle retention hold
+                    self._trie.remove(r.committed, i)
+                    r.committed, r.retained = [], False
+                    self._mark("free", i)
 
     # -- request intake ------------------------------------------------------
 
@@ -158,7 +261,8 @@ class ServeScheduler:
             rid = self._next_rid
         assert (rid not in self._results
                 and all(q[0] != rid for q in self._queue)
-                and all(s is None or s.rid != rid for s in self._slots)), (
+                and all(s.rid != rid for r in self._rows
+                        for s in r.active)), (
             f"request id {rid} already pending")
         self._next_rid = max(self._next_rid, rid + 1)
         ctx = [self.sp.bos]
@@ -173,64 +277,331 @@ class ServeScheduler:
                             time.perf_counter()))
         return rid
 
-    def _admit(self, row: int, rid: int, ctx: List[int],
-               candidates: List[List[int]], t0: float) -> None:
-        units: deque = deque()
+    # -- unit construction ---------------------------------------------------
+
+    def _commit_units(self, tokens: List[int], start: int) -> List[_Unit]:
+        """Committed context chunks for ``tokens`` at positions
+        ``start..start+len-1``, largest-bucket sized."""
         chunk = self.buckets[-1]
-        for lo in range(0, len(ctx), chunk):
-            part = ctx[lo: lo + chunk]
+        units = []
+        for lo in range(0, len(tokens), chunk):
+            part = tokens[lo: lo + chunk]
             units.append(_Unit(
                 tokens=np.asarray(part, np.int32),
-                positions=np.arange(lo, lo + len(part), dtype=np.int32),
+                positions=np.arange(start + lo, start + lo + len(part),
+                                    dtype=np.int32),
                 is_sum=np.zeros(len(part), bool),
                 seg=np.full(len(part), -1, np.int32), commit=True))
-        n = len(ctx)
-        burst_total = 0
-        # Greedy-fill candidates into shared bursts: each candidate+[SUM]
-        # group carries its index as an in-burst segment, so one decode step
-        # scores as many candidates as fit in the largest bucket. A burst
-        # also writes (unreachable) KV at slots n..n+len-1, so it must stay
-        # within the cache rows left above the context.
-        burst_cap = min(chunk, self.capacity - n)
+        return units
+
+    def _burst_units(self, candidates: List[List[int]], n: int,
+                     suffix: List[int], burst_cap: int
+                     ) -> Tuple[List[_Unit], int]:
+        """Non-committing scoring bursts: greedy-fill candidate+[SUM]
+        groups into shared bursts; each group carries its candidate index
+        as an in-burst segment, so one decode step scores as many
+        candidates as fit. A burst also writes (unreachable) KV after the
+        committed block, so it must stay within ``burst_cap`` slots.
+
+        ``suffix`` is the request's uncommitted context tail (nonempty
+        only when sharing a busy row's shorter committed prefix): it rides
+        at the head of **every** burst as shared (seg −1) tokens at
+        positions ``n−len(suffix)..n−1``, re-creating the request's full
+        context without writing to the shared block. Candidate positions
+        restart at ``n`` either way — identical to the unshared layout.
+
+        Returns (units, total burst tokens incl. suffix copies).
+        """
+        units: List[_Unit] = []
+        total = 0
         toks: List[int] = []
         pos: List[int] = []
         is_sum: List[bool] = []
         seg: List[int] = []
         score_at: List[Tuple[int, int]] = []
 
+        def begin():
+            toks.extend(suffix)
+            pos.extend(range(n - len(suffix), n))
+            is_sum.extend([False] * len(suffix))
+            seg.extend([-1] * len(suffix))
+
         def flush():
-            if toks:
+            nonlocal total
+            if len(toks) > len(suffix) or (toks and not suffix):
                 units.append(_Unit(
                     tokens=np.asarray(toks, np.int32),
                     positions=np.asarray(pos, np.int32),
                     is_sum=np.asarray(is_sum),
                     seg=np.asarray(seg, np.int32),
                     commit=False, score_at=list(score_at)))
+                total += len(toks)
             for l in (toks, pos, is_sum, seg, score_at):
                 l.clear()
 
+        begin()
         for j, cand in enumerate(candidates):
             group = list(cand) + [self.sp.sum]
-            burst_total += len(group)
-            if toks and len(toks) + len(group) > burst_cap:
+            if len(toks) > len(suffix) and len(toks) + len(group) > burst_cap:
                 flush()
+                begin()
             toks.extend(group)
             pos.extend(range(n, n + len(group)))   # every candidate restarts
             is_sum.extend([False] * len(cand) + [True])
             seg.extend([j] * len(group))
             score_at.append((j, len(toks) - 1))
         flush()
-        self._slots[row] = _Slot(
-            rid=rid, units=units, scores=[None] * len(candidates),
-            submit_t=t0, context_tokens=n, burst_tokens=burst_total,
-            n_candidates=len(candidates))
+        return units, total
+
+    # -- admission -----------------------------------------------------------
+
+    def _mark(self, which: str, row: int, keep: int = 0) -> None:
+        """Queue a refcount/trim update for ``row``; applied in one batched
+        jitted call per phase (`_flush_row_ops`) instead of per event —
+        per-event dispatch would dominate the step at small model sizes.
+        Retain/free marks are *counts*, not flags: several requests can
+        take (or drop) references on the same row within one wave."""
+        if which == "trim":
+            self._pending["trim"][row] = True
+            self._pending["trim_keep"][row] = keep
+        else:
+            self._pending[which][row] += 1
+
+    def _flush_row_ops(self) -> None:
+        """Apply queued row ops in dependency order: free (steal resets)
+        -> trim (roll back retained blocks) -> retain (new references).
+        The three touch disjoint rows within one phase except steal, which
+        queues free+retain on the same row — exactly the order applied."""
+        p = self._pending
+        if p["free"].any():
+            self.cache = self._free(self.cache, jnp.asarray(p["free"]))
+        if p["trim"].any():
+            self.cache = self._trim(self.cache, jnp.asarray(p["trim"]),
+                                    jnp.asarray(p["trim_keep"]))
+        if p["retain"].any():
+            self.cache = self._retain(self.cache, jnp.asarray(p["retain"]))
+        self._pending = self._fresh_pending()
+
+    def _fresh_pending(self) -> Dict[str, np.ndarray]:
+        return {"free": np.zeros((self.n_slots,), np.int32),
+                "trim": np.zeros((self.n_slots,), bool),
+                "retain": np.zeros((self.n_slots,), np.int32),
+                "trim_keep": np.zeros((self.n_slots,), np.int32)}
+
+    def _admit(self, row: int, rid: int, ctx: List[int],
+               candidates: List[List[int]], t0: float, *,
+               shared_depth: int, commit_from: int,
+               suffix_in_burst: bool) -> None:
+        """Build the request's unit queue on ``row``.
+
+        ``shared_depth``   — context prefix reused from the row's block;
+        ``commit_from``    — first context index this request commits
+                             (== len(ctx) when nothing is committed);
+        ``suffix_in_burst``— True when the row is busy with other readers,
+                             so the unshared tail ``ctx[shared_depth:]``
+                             must ride each burst instead of extending the
+                             shared block.
+        """
+        n = len(ctx)
+        r = self._rows[row]
+        units: deque = deque()
+        to_commit = ctx[commit_from:]
+        if to_commit:
+            units.extend(self._commit_units(to_commit, commit_from))
+            r.pending_commit += len(units)
+            if r.committed:
+                self._trie.remove(r.committed, row)
+            r.committed = list(ctx)
+            self._trie.insert(r.committed, row)
+        elif not r.committed:
+            r.committed = list(ctx)
+            self._trie.insert(r.committed, row)
+        suffix = ctx[shared_depth:] if suffix_in_burst else []
+        committed_len = shared_depth if suffix_in_burst else n
+        burst_cap = min(self.buckets[-1], self.capacity - committed_len)
+        bursts, burst_total = self._burst_units(candidates, n, suffix,
+                                                burst_cap)
+        units.extend(bursts)
+        slot = _Slot(rid=rid, row=row, units=units,
+                     scores=[None] * len(candidates), submit_t=t0,
+                     n_context=n, prefill_tokens=len(to_commit),
+                     burst_tokens=burst_total,
+                     slate_tokens=sum(len(c) + 1 for c in candidates),
+                     shared_prefix_tokens=shared_depth,
+                     n_candidates=len(candidates))
+        r.active.append(slot)
+        if shared_depth > 0:
+            self.shared_admissions += 1
+
+    def _try_place(self, rid: int, ctx: List[int],
+                   candidates: List[List[int]], t0: float) -> bool:
+        """Place one queued request onto a cache row, preferring the most
+        reusable committed context block. The policy ladder (first match
+        wins; every rung needs a non-stale block with a usable prefix of
+        >= ``min_shared_prefix`` tokens; rungs 1 and 3 mutate the block so
+        they additionally need its commits drained):
+
+        1. **extend a retained block** — an inactive row whose full
+           committed context is a prefix of ``ctx``: commit only the
+           suffix (the block grows; its trie entry is re-keyed). Exact
+           matches commit nothing.
+        2. **read a busy block** — an active row whose full committed
+           context is a prefix of ``ctx``: take a reference and ride the
+           unshared suffix inside each burst (the block itself is
+           immutable while others read it). Needs suffix + largest
+           candidate to fit one bucket. The block may still be committing
+           (a same-wave admission): the sharer's bursts are gated behind
+           the commits by ``_next_unit``.
+        3. **trim a retained block** — an inactive row sharing only a
+           proper prefix: roll the block back to the shared prefix
+           (`trim_slots`), then commit the rest, as in 1.
+        4. **fresh row** — a never-used/reset row, else steal the
+           least-recently-used retained row (`free_slots` drops the
+           retention reference, resetting it).
+
+        Returns False when nothing can host the request (all rows busy).
+        """
+        n = len(ctx)
+        max_group = max(len(c) + 1 for c in candidates)
+        if self.share_prefix:
+            end_d, end_rows, thr_d, thr_rows = self._trie.match(ctx)
+            ok = lambda i: (self._rows[i].pending_commit == 0
+                            and not self._rows[i].stale)
+            if end_d >= self.min_shared_prefix:
+                idle = [i for i in sorted(end_rows)
+                        if ok(i) and not self._rows[i].active]
+                # a busy block may still have commits in flight (its
+                # committer was admitted this very wave): sharers can be
+                # placed anyway — their bursts are gated behind the
+                # commits by `_next_unit`, never reading a half-written
+                # block
+                busy = [i for i in sorted(end_rows)
+                        if not self._rows[i].stale and self._rows[i].active]
+                if idle:
+                    row = idle[0]
+                    self._rows[row].retained = False   # hold transfers
+                    self._admit(row, rid, ctx, candidates, t0,
+                                shared_depth=end_d, commit_from=end_d,
+                                suffix_in_burst=False)
+                    return True
+                # the suffix-fits check depends only on the request: all
+                # rows in `busy` share the same committed length end_d
+                if busy and (n - end_d) + max_group <= min(
+                        self.buckets[-1], self.capacity - end_d):
+                    row = busy[0]
+                    self._mark("retain", row)
+                    self._admit(row, rid, ctx, candidates, t0,
+                                shared_depth=end_d, commit_from=n,
+                                suffix_in_burst=True)
+                    return True
+            if thr_d >= self.min_shared_prefix:
+                trimmable = [i for i in sorted(thr_rows)
+                             if ok(i) and not self._rows[i].active
+                             and self._rows[i].retained
+                             and len(self._rows[i].committed) > thr_d]
+                if trimmable:
+                    row = min(trimmable,
+                              key=lambda i: self._rows[i].last_used)
+                    r = self._rows[row]
+                    self._trie.remove(r.committed, row)
+                    r.committed = []
+                    r.retained = False                 # hold transfers
+                    self._mark("trim", row, keep=thr_d)
+                    self._admit(row, rid, ctx, candidates, t0,
+                                shared_depth=thr_d, commit_from=thr_d,
+                                suffix_in_burst=False)
+                    return True
+        fresh = [i for i, r in enumerate(self._rows)
+                 if not r.active and not r.retained and not r.committed]
+        if fresh:
+            row = fresh[0]
+            self._mark("retain", row)
+            self._admit(row, rid, ctx, candidates, t0,
+                        shared_depth=0, commit_from=0, suffix_in_burst=False)
+            return True
+        stealable = [i for i, r in enumerate(self._rows)
+                     if not r.active and r.retained and r.pending_commit == 0]
+        if stealable:
+            row = min(stealable, key=lambda i: self._rows[i].last_used)
+            r = self._rows[row]
+            self._trie.remove(r.committed, row)
+            r.committed, r.retained = [], False
+            self._mark("free", row)                    # drop hold -> reset
+            self._mark("retain", row)
+            self._admit(row, rid, ctx, candidates, t0,
+                        shared_depth=0, commit_from=0, suffix_in_burst=False)
+            return True
+        return False
 
     # -- the batched step ----------------------------------------------------
 
+    def _next_unit(self, r: _Row) -> Optional[Tuple[_Slot, _Unit]]:
+        """Round-robin the row's active requests; a request's own units
+        stay FIFO (commits before bursts). While the row has commits in
+        flight (``pending_commit > 0``) only commit units may run: a
+        sharer admitted onto a mid-commit block waits here instead of
+        bursting against a half-written context. At most one active slot
+        holds commit units (only idle-row admissions commit), so the gate
+        cannot deadlock — the committer's own units are never gated."""
+        if not r.active:
+            return None
+        for off in range(len(r.active)):
+            slot = r.active[(r.rr + off) % len(r.active)]
+            if not slot.units:
+                continue
+            if r.pending_commit > 0 and not slot.units[0].commit:
+                continue                       # bursts wait for the block
+            r.rr = (r.rr + off + 1) % len(r.active)
+            return slot, slot.units.popleft()
+        return None
+
+    def _finish(self, slot: _Slot, now: float) -> None:
+        """Harvested the request's last [SUM]: record the result and drop
+        its cache reference. The row's context block outlives the request
+        when sharing is on — the last departing reader flips the row to
+        ``retained`` (keeping the reference as the retention hold) instead
+        of freeing, so the block stays matchable in the trie until stolen
+        or trimmed.
+
+        Accounting: ``logical_tokens`` is what k standalone prefills would
+        compute (k·n context re-encodes + the slate); ``computed`` is what
+        this scheduler actually fed (committed prefill + burst tokens,
+        suffix copies included); ``cached_tokens`` is the difference — the
+        prompt tokens served from cache, whether by own-context reuse
+        across the k candidates or by a cross-request shared prefix."""
+        r = self._rows[slot.row]
+        n, k = slot.n_context, slot.n_candidates
+        logical_tokens = k * n + slot.slate_tokens
+        computed = slot.prefill_tokens + slot.burst_tokens
+        self._results[slot.rid] = RequestResult(
+            rid=slot.rid, scores=list(slot.scores),
+            latency_s=now - slot.submit_t,
+            context_tokens=n, prefill_tokens=slot.prefill_tokens,
+            burst_tokens=slot.burst_tokens,
+            shared_prefix_tokens=slot.shared_prefix_tokens,
+            cached_tokens=logical_tokens - computed,
+            logical_tokens=logical_tokens)
+        r.active.remove(slot)
+        if self.share_prefix:
+            if r.active:
+                self._mark("free", slot.row)           # drop reader ref
+            elif r.stale:                              # pre-swap KV: drop it
+                self._trie.remove(r.committed, slot.row)
+                r.committed, r.retained, r.stale = [], False, False
+                self._mark("free", slot.row)
+            else:
+                r.retained = True                      # ref becomes the hold
+        else:
+            if r.committed and not r.active:
+                self._trie.remove(r.committed, slot.row)
+                r.committed = []
+            self._mark("free", slot.row)
+
     def step(self) -> bool:
-        """Admit into free rows, run one batched decode step over every busy
-        row's next work unit, harvest scores, evict finished rows. Returns
-        False when queue and slots are both empty (nothing happened)."""
+        """Admit queued requests (strict FIFO, as many as place), run one
+        batched decode step over every busy row's next work unit, harvest
+        scores, retire finished requests. Returns False when queue and
+        rows are both drained (nothing happened)."""
         if self._param_source is not None:
             # dedicated counter: n_steps stalls on idle calls, which would
             # either re-poll every call or never poll again
@@ -239,20 +610,21 @@ class ServeScheduler:
                 if update is not None:
                     self.update_params(update[1], update[0])
             self._poll_tick += 1
-        admitted = np.zeros((self.n_slots,), bool)
-        for row in range(self.n_slots):
-            if self._slots[row] is None and self._queue:
-                self._admit(row, *self._queue.popleft())
-                admitted[row] = True
-        if admitted.any():
-            self.cache = self._free(self.cache, jnp.asarray(admitted))
+        while self._queue:
+            rid, ctx, cands, t0 = self._queue[0]
+            if not self._try_place(rid, ctx, cands, t0):
+                break
+            self._queue.popleft()
+        self._flush_row_ops()          # steals/trims land before the decode
 
-        work = [(row, slot.units.popleft())
-                for row, slot in enumerate(self._slots)
-                if slot is not None and slot.units]
+        work = []
+        for i, r in enumerate(self._rows):
+            picked = self._next_unit(r)
+            if picked is not None:
+                work.append((i, picked[0], picked[1]))
         if not work:
             return False
-        need = max(len(u.tokens) for _, u in work)
+        need = max(len(u.tokens) for _, _, u in work)
         s = next(b for b in self.buckets if b >= need)
 
         tokens = np.zeros((self.n_slots, s), np.int32)
@@ -261,13 +633,13 @@ class ServeScheduler:
         valid = np.zeros((self.n_slots, s), bool)
         seg = np.full((self.n_slots, s), -1, np.int32)
         commit = np.zeros((self.n_slots,), bool)
-        for row, u in work:
-            n = len(u.tokens)
-            tokens[row, :n] = u.tokens
-            positions[row, :n] = u.positions
-            is_sum[row, :n] = u.is_sum
-            seg[row, :n] = u.seg
-            valid[row, :n] = True
+        for row, _, u in work:
+            m = len(u.tokens)
+            tokens[row, :m] = u.tokens
+            positions[row, :m] = u.positions
+            is_sum[row, :m] = u.is_sum
+            seg[row, :m] = u.seg
+            valid[row, :m] = True
             commit[row] = u.commit
 
         p, self.cache = self._decode(
@@ -278,25 +650,22 @@ class ServeScheduler:
         p = np.asarray(p)
 
         now = time.perf_counter()
-        for row, u in work:
-            slot = self._slots[row]
+        for row, slot, u in work:
+            r = self._rows[row]
+            r.last_used = self.n_steps
+            if u.commit:
+                r.pending_commit -= 1
             for j, off in u.score_at:
                 slot.scores[j] = float(p[row, off])
-            if not slot.units:                       # evict: request done
-                c, b = slot.context_tokens, slot.burst_tokens
-                k = slot.n_candidates
-                self._results[slot.rid] = RequestResult(
-                    rid=slot.rid, scores=list(slot.scores),
-                    latency_s=now - slot.submit_t,
-                    context_tokens=c, burst_tokens=b,
-                    cached_tokens=(k - 1) * c,
-                    logical_tokens=k * c + b)
-                self._slots[row] = None
+            if not slot.units:                       # request done
+                self._finish(slot, now)
+        self._flush_row_ops()          # departing readers' refs drop once
         return True
 
     def run(self) -> Dict[int, RequestResult]:
-        """Drain queue and slots; returns results for every request scored
-        since the last ``run``."""
+        """Drain queue and rows; returns results for every request scored
+        since the last ``run``. Retained context blocks survive across
+        ``run`` calls, so later traffic still shares them."""
         while self.step():
             pass
         out, self._results = self._results, {}

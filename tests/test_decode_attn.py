@@ -1,0 +1,187 @@
+"""Decode-attention kernel: kernel vs dense oracle on raw operands, and the
+engine's attn_impl="pallas" decode path vs dense across the full serve
+matrix (GQA/MLA x window/ring x commit/no-commit x seg-isolated slates)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attn.ops import decode_attention
+from repro.kernels.decode_attn.ref import decode_attention_ref
+from repro.models.transformer import init_params
+from repro.serve.cache import init_lm_cache
+from repro.serve.engine import make_decode_fn
+
+from test_serve import _cfg
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle on raw operands
+# ---------------------------------------------------------------------------
+
+def _operands(seed=0, B=3, s=5, H=4, Hk=2, D=8, Dv=8, cap=22):
+    r = np.random.default_rng(seed)
+    f32 = lambda *shape: jnp.asarray(r.normal(size=shape), jnp.float32)
+    q, k, v = f32(B, s, H, D), f32(B, cap, Hk, D), f32(B, cap, Hk, Dv)
+    qn, kn = f32(B, s, H, D), f32(B, cap, Hk, D)
+    alibi = jnp.asarray(r.uniform(0.1, 1.0, H), jnp.float32)
+    pos_k = np.full((B, cap), -1, np.int32)          # rows at different fill
+    pos_k[0, :10] = np.arange(10)
+    pos_k[1, :17] = np.arange(17)                    # row 2 stays empty
+    pos_q = np.tile(np.arange(10, 10 + s, dtype=np.int32), (B, 1))
+    sum_q = r.random((B, s)) < 0.4
+    seg_k = np.full((B, cap), -1, np.int32)
+    seg_k[0, 7:10] = [0, 0, 1]
+    seg_q = np.zeros((B, s), np.int32)
+    seg_q[0] = [0, 0, 1, 1, 1]
+    return dict(q=q, k=k, v=v, pos_q=jnp.asarray(pos_q),
+                pos_k=jnp.asarray(pos_k)), dict(
+        sum_q=jnp.asarray(sum_q), seg_q=jnp.asarray(seg_q),
+        seg_k=jnp.asarray(seg_k), qn=qn, kn=kn, alibi=alibi)
+
+
+@pytest.mark.parametrize("window", [0, 6])
+@pytest.mark.parametrize("use_nope", [False, True])
+@pytest.mark.parametrize("use_seg", [False, True])
+def test_kernel_matches_oracle(window, use_nope, use_seg):
+    base, opt = _operands()
+    kw = dict(window=window, block_size=8, interpret=True)
+    ref_kw = dict(window=window)
+    if use_nope:
+        kw.update(is_sum_q=opt["sum_q"], q_nope=opt["qn"],
+                  k_nope=opt["kn"], alibi=opt["alibi"])
+        ref_kw.update(sum_q=opt["sum_q"], q_nope=opt["qn"],
+                      k_nope=opt["kn"], alibi=opt["alibi"])
+    if use_seg:
+        kw.update(seg_q=opt["seg_q"], seg_k=opt["seg_k"])
+        ref_kw.update(seg_q=opt["seg_q"], seg_k=opt["seg_k"])
+    got = decode_attention(**base, **kw)
+    want = decode_attention_ref(**base, **ref_kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+    # a fully-empty cache row must produce exactly zero output
+    assert np.all(np.asarray(got)[2] == 0.0)
+
+
+def test_kernel_mqa_value_dim():
+    """MQA (Hk=1) with Dv != Dqk — the absorbed-MLA operand shape."""
+    base, _ = _operands(Hk=1, Dv=5)
+    got = decode_attention(**base, window=0, block_size=16, interpret=True)
+    want = decode_attention_ref(**base, window=0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_kernel_pads_ragged_capacity():
+    """Capacity not divisible by the block: padded slots must act empty."""
+    base, _ = _operands(cap=22)
+    got = decode_attention(**base, window=0, block_size=16, interpret=True)
+    want = decode_attention_ref(**base, window=0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# engine: attn_impl="pallas" decode vs dense, full serve matrix
+# ---------------------------------------------------------------------------
+
+def _run_sequence(cfg, params, decode, *, seed, window, burst):
+    """Chunked commits then (optionally) a seg-isolated non-commit burst
+    with one invalid padding slot; returns the per-step score arrays."""
+    B, S = 2, 10
+    r = np.random.default_rng(seed)
+    toks = r.integers(8, 128, (B, S)).astype(np.int32)
+    pos = np.broadcast_to(np.arange(S, dtype=np.int32), (B, S)).copy()
+    is_sum = toks == 9
+    cache = init_lm_cache(cfg, B, 20, dtype=jnp.float32)
+    outs = []
+    p, cache = decode(params, cache, toks[:, :6], pos[:, :6], is_sum[:, :6])
+    outs.append(np.asarray(p))
+    if burst:
+        bt, bp = toks[:, 6:10], pos[:, 6:10]
+        bs = np.zeros((B, 4), bool)
+        bs[:, 1] = bs[:, 3] = True                      # two [SUM] readouts
+        seg = np.asarray([[0, 0, 1, 1]] * B, np.int32)  # two-candidate slate
+        valid = np.ones((B, 4), bool)
+        valid[1, 3] = False                             # right-padded row
+        commit = np.zeros((B,), bool)
+        p, cache = decode(params, cache, bt, bp, bs, valid, commit, seg)
+        outs.append(np.asarray(p))
+        # non-committing: a repeat burst must reproduce the same scores
+        p2, _ = decode(params, cache, bt, bp, bs, valid, commit, seg)
+        outs.append(np.asarray(p2))
+    else:
+        for t in range(6, S):
+            p, cache = decode(params, cache, toks[:, t:t + 1],
+                              pos[:, t:t + 1], is_sum[:, t:t + 1])
+            outs.append(np.asarray(p))
+    return outs
+
+
+@pytest.mark.parametrize("attn_type", ["gqa", "mla"])
+@pytest.mark.parametrize("window", [0, 8])
+@pytest.mark.parametrize("burst", [False, True])
+def test_pallas_decode_matches_dense(attn_type, window, burst):
+    """The fused decode kernel must reproduce the dense decode path <=1e-4
+    across GQA/MLA, unlimited/windowed, one-token decode and commit=False
+    seg-isolated bursts with invalid padding."""
+    cfg = _cfg(attn_type)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    dense = make_decode_fn(cfg, window=window, ring=False)
+    pallas = make_decode_fn(cfg, window=window, ring=False,
+                            attn_impl="pallas", block_size=8)
+    want = _run_sequence(cfg, params, dense, seed=0, window=window,
+                         burst=burst)
+    got = _run_sequence(cfg, params, pallas, seed=0, window=window,
+                        burst=burst)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, atol=1e-4)
+    if burst:   # the kernel path is non-committing too: repeat == first
+        np.testing.assert_array_equal(got[1], got[2])
+
+
+def test_pallas_ring_decode_matches_dense():
+    """Ring cache (wrapped physical slots, monotone logical positions):
+    the kernel's positional mask must not care about wrap order."""
+    from repro.models.transformer import ModelConfig
+    cfg = ModelConfig(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                      d_ff=64, vocab_size=64, head_dim=16, window=8,
+                      attn_impl="dense", remat=False)
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    B, cap, W, T = 1, 12, 8, 30
+    dense = make_decode_fn(cfg, window=W, ring=True)
+    pallas = make_decode_fn(cfg, window=W, ring=True, attn_impl="pallas",
+                            block_size=4)
+    r = np.random.default_rng(1)
+    toks = r.integers(8, 64, (B, T)).astype(np.int32)
+    pos = np.arange(T, dtype=np.int32)[None]
+    cd = init_lm_cache(cfg, B, cap, dtype=jnp.float32)
+    cp = init_lm_cache(cfg, B, cap, dtype=jnp.float32)
+    ns = np.zeros((B, 1), bool)
+    for t in range(T):
+        pd, cd = dense(params, cd, toks[:, t:t + 1], pos[:, t:t + 1], ns)
+        pp, cp = pallas(params, cp, toks[:, t:t + 1], pos[:, t:t + 1], ns)
+        np.testing.assert_allclose(np.asarray(pp), np.asarray(pd), atol=1e-4)
+
+
+def test_pallas_decode_equals_prefill():
+    """End to end: token-by-token pallas decode reproduces prefill scores
+    (the decode==prefill contract, now on the kernel path)."""
+    from repro.serve.engine import make_prefill_fn
+    cfg = _cfg()
+    p = init_params(jax.random.PRNGKey(0), cfg)
+    B, S, W = 2, 12, 8
+    r = np.random.default_rng(0)
+    toks = r.integers(8, 128, (B, S)).astype(np.int32)
+    toks[:, -1] = 2
+    pos = np.broadcast_to(np.arange(S, dtype=np.int32), (B, S)).copy()
+    is_sum = toks == 2
+    valid = np.ones((B, S), bool)
+    p_pre = make_prefill_fn(cfg, window=W)(
+        p, {"tokens": toks, "positions": pos, "is_sum": is_sum,
+            "valid": valid})
+    decode = make_decode_fn(cfg, window=W, ring=False, attn_impl="pallas",
+                            block_size=4)
+    cache = init_lm_cache(cfg, B, S, dtype=jnp.float32)
+    for t in range(S):
+        pc, cache = decode(p, cache, toks[:, t:t + 1], pos[:, t:t + 1],
+                           is_sum[:, t:t + 1])
+    np.testing.assert_allclose(np.asarray(pc[:, 0]),
+                               np.asarray(p_pre[:, -1]), atol=2e-5)

@@ -1,0 +1,269 @@
+"""Cross-request prefix sharing: the context-hash trie, refcounted cache
+ops, and scheduler-level sharing (byte-identical scores, hit accounting)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.requests import ContextTrie
+from repro.models.transformer import init_params
+from repro.serve.cache import (free_slots, init_lm_cache, retain_slots,
+                               trim_slots)
+from repro.serve.scheduler import ServeScheduler
+
+from test_serve import _cfg, _independent_scores, _request_material
+
+
+# ---------------------------------------------------------------------------
+# ContextTrie
+# ---------------------------------------------------------------------------
+
+def test_trie_insert_match_remove():
+    t = ContextTrie()
+    t.insert([1, 2, 3], "a")
+    t.insert([1, 2, 3, 4, 5], "b")
+    t.insert([1, 9], "c")
+    # full-prefix (terminal) match at the deepest end
+    end_d, ends, thr_d, thr = t.match([1, 2, 3, 4, 5, 6])
+    assert (end_d, ends) == (5, {"b"})
+    assert (thr_d, thr) == (5, {"b"})
+    # terminal "a" at 3, "b" passes through deeper
+    end_d, ends, thr_d, thr = t.match([1, 2, 3, 4])
+    assert (end_d, ends) == (3, {"a"})
+    assert (thr_d, thr) == (4, {"b"})
+    # divergent tail: only the shared prefix matches
+    end_d, ends, thr_d, thr = t.match([1, 2, 7])
+    assert (end_d, ends) == (0, set())
+    assert thr_d == 2 and thr == {"a", "b"}
+    assert t.owner_length("b") == 5
+    t.remove([1, 2, 3, 4, 5], "b")
+    end_d, ends, thr_d, thr = t.match([1, 2, 3, 4])
+    assert (end_d, ends) == (3, {"a"}) and (thr_d, thr) == (3, {"a"})
+    t.remove([1, 2, 3], "a")
+    t.remove([1, 9], "c")
+    assert len(t) == 0 and not t._root["kids"]      # pruned empty
+
+
+def test_trie_one_sequence_per_owner():
+    t = ContextTrie()
+    t.insert([1], "a")
+    with pytest.raises(AssertionError):
+        t.insert([2], "a")
+
+
+# ---------------------------------------------------------------------------
+# refcounted cache ops
+# ---------------------------------------------------------------------------
+
+def test_refcount_retain_free_cycle():
+    """free_slots decrements; the row resets only at refcount zero."""
+    cfg = _cfg()
+    cache = init_lm_cache(cfg, 2, 8, dtype=jnp.float32)
+    cache["pos"] = cache["pos"].at[:, :3].set(jnp.arange(3))
+    cache["cursor"] = jnp.asarray([3, 3], jnp.int32)
+    both = jnp.asarray([True, True])
+    row0 = jnp.asarray([True, False])
+    cache = retain_slots(retain_slots(cache, both), row0)   # ref = [2, 1]
+    np.testing.assert_array_equal(np.asarray(cache["ref"]), [2, 1])
+    cache = free_slots(cache, row0)                         # ref = [1, 1]
+    assert int(cache["cursor"][0]) == 3                     # still held
+    np.testing.assert_array_equal(np.asarray(cache["pos"][0]),
+                                  [0, 1, 2, -1, -1, -1, -1, -1])
+    cache = free_slots(cache, both)                         # ref = [0, 0]
+    assert np.all(np.asarray(cache["pos"]) == -1)
+    np.testing.assert_array_equal(np.asarray(cache["cursor"]), [0, 0])
+    # a zero-ref free still resets (legacy idiom) and saturates at 0
+    cache = free_slots(cache, row0)
+    np.testing.assert_array_equal(np.asarray(cache["ref"]), [0, 0])
+
+
+def test_trim_slots_rolls_back_to_prefix():
+    cfg = _cfg()
+    cache = init_lm_cache(cfg, 2, 8, dtype=jnp.float32)
+    cache["pos"] = cache["pos"].at[:, :5].set(jnp.arange(5))
+    cache["cursor"] = jnp.asarray([5, 5], jnp.int32)
+    out = trim_slots(cache, jnp.asarray([True, False]),
+                     jnp.asarray([2, 2], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(out["pos"][0]),
+                                  [0, 1, -1, -1, -1, -1, -1, -1])
+    np.testing.assert_array_equal(np.asarray(out["cursor"]), [2, 5])
+    np.testing.assert_array_equal(np.asarray(out["pos"][1]),
+                                  np.asarray(cache["pos"][1]))
+
+
+# ---------------------------------------------------------------------------
+# scheduler-level sharing
+# ---------------------------------------------------------------------------
+
+def _solo_baseline(params, cfg, ctx, cands, **kw):
+    """The same request scored on a fresh scheduler with sharing off."""
+    s = ServeScheduler(params, cfg, n_slots=2, capacity=64,
+                       buckets=(8, 16, 32), share_prefix=False, **kw)
+    rid = s.submit(ctx, cands)
+    return s.run()[rid]
+
+
+@pytest.mark.parametrize("attn_impl", ["dense", "pallas"])
+def test_exact_prefix_share_scores_byte_identical(attn_impl):
+    """Two sequential requests with the same context: the second commits
+    nothing, reuses the retained block, and its scores are byte-identical
+    to an unshared run — sharing changes which row a burst reads, never
+    what it attends."""
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    ctx, cands_a = _request_material(seed=3)
+    cands_b = [[70, 71], [72, 73, 74], [75]]
+    sched = ServeScheduler(params, cfg, n_slots=2, capacity=64,
+                           buckets=(8, 16, 32), attn_impl=attn_impl)
+    ra = sched.submit(ctx, cands_a)
+    sched.run()
+    rb = sched.submit(ctx, cands_b)
+    got = sched.run()[rb]
+    want = _solo_baseline(params, cfg, ctx, cands_b, attn_impl=attn_impl)
+    np.testing.assert_array_equal(np.asarray(got.scores),
+                                  np.asarray(want.scores))
+    n = got.context_tokens
+    assert got.shared_prefix_tokens == n and got.prefill_tokens == 0
+    # all k context reads came from cache: hit fraction strictly above the
+    # unshared (k-1)/k reuse level, and the accounting closes
+    k = len(cands_b)
+    assert got.cached_tokens == k * n
+    assert got.cache_hit_fraction > want.cache_hit_fraction > 0
+    assert sched.shared_admissions == 1
+
+
+def test_partial_prefix_share_and_hit_fractions():
+    """A request sharing only a proper prefix trims the retained block,
+    commits just its tail, and still matches independent prefills; hit
+    accounting reflects the shared tokens."""
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    ctx, cands = _request_material(seed=5)
+    sched = ServeScheduler(params, cfg, n_slots=2, capacity=64,
+                           buckets=(8, 16, 32))
+    sched.submit(ctx, cands)
+    sched.run()
+    ctx2 = [list(ctx[0]), list(ctx[1]), [60, 61], [62, 63, 64]]
+    r2 = sched.submit(ctx2, cands)
+    got = sched.run()[r2]
+    want = _independent_scores(params, cfg, ctx2, cands, max_len=96)
+    np.testing.assert_allclose(np.asarray(got.scores), want, atol=1e-4)
+    shared = 1 + len(ctx[0]) + len(ctx[1])          # BOS + two interactions
+    assert got.shared_prefix_tokens == shared
+    assert got.prefill_tokens == got.context_tokens - shared
+    base = _solo_baseline(params, cfg, ctx2, cands)
+    assert got.cache_hit_fraction > base.cache_hit_fraction
+
+
+def test_concurrent_share_rides_suffix_bursts():
+    """Two in-flight requests, the second extending the first's committed
+    context: the suffix rides each burst (no commit onto the busy block)
+    and both requests match their independent-prefill scores."""
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(2), cfg)
+    ctx, cands_a = _request_material(seed=7)
+    ctx_b = [list(c) for c in ctx] + [[80, 81]]
+    cands_b = [[85, 86], [87]]
+    sched = ServeScheduler(params, cfg, n_slots=1, capacity=64,
+                           buckets=(8, 16, 32))
+    ra = sched.submit(ctx, cands_a)
+    rb = sched.submit(ctx_b, cands_b)
+    res = sched.run()
+    want_a = _independent_scores(params, cfg, ctx, cands_a, max_len=96)
+    want_b = _independent_scores(params, cfg, ctx_b, cands_b, max_len=96)
+    np.testing.assert_allclose(np.asarray(res[ra].scores), want_a, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(res[rb].scores), want_b, atol=1e-4)
+    assert res[rb].prefill_tokens == 0              # nothing committed
+    assert res[rb].shared_prefix_tokens == res[ra].context_tokens
+    # the 2-token suffix rode each burst: burst feed exceeds the slate
+    assert res[rb].burst_tokens > sum(len(c) + 1 for c in cands_b)
+    assert res[rb].cache_hit_fraction > 0
+
+
+def test_same_wave_submission_shares_after_commit_gate():
+    """An original and its revisit submitted together (admitted in the
+    same wave, onto plenty of rows): the revisit must still share the
+    original's block — its bursts are gated until the block's commits
+    drain — and both must match independent prefills."""
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(5), cfg)
+    ctx, cands_a = _request_material(seed=9)
+    cands_b = [[91, 92], [93]]
+    sched = ServeScheduler(params, cfg, n_slots=4, capacity=64,
+                           buckets=(8, 16, 32))
+    ra = sched.submit(ctx, cands_a)
+    rb = sched.submit(ctx, cands_b)                 # same context, same wave
+    res = sched.run()
+    want_a = _independent_scores(params, cfg, ctx, cands_a, max_len=96)
+    want_b = _independent_scores(params, cfg, ctx, cands_b, max_len=96)
+    np.testing.assert_allclose(np.asarray(res[ra].scores), want_a, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(res[rb].scores), want_b, atol=1e-4)
+    assert res[rb].shared_prefix_tokens == res[ra].context_tokens
+    assert res[rb].prefill_tokens == 0
+    assert sched.shared_admissions == 1
+
+
+def test_no_sharing_below_min_prefix():
+    """Contexts that agree only on [BOS] must not trigger sharing (and
+    must still score correctly through steal/readmission)."""
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(3), cfg)
+    sched = ServeScheduler(params, cfg, n_slots=2, capacity=64,
+                           buckets=(8, 16, 32), min_shared_prefix=4)
+    for seed in (11, 12, 13):
+        ctx, cands = _request_material(seed=seed, n_ctx=3, k=2)
+        rid = sched.submit(ctx, cands)
+        res = sched.run()[rid]
+        want = _independent_scores(params, cfg, ctx, cands, max_len=96)
+        np.testing.assert_allclose(np.asarray(res.scores), want, atol=1e-4)
+        assert res.shared_prefix_tokens == 0
+    assert sched.shared_admissions == 0
+
+
+def test_weight_swap_invalidates_retained_blocks():
+    """A weight hot-swap must drop retained context blocks: their KV
+    encodes the old weights, and sharing them would score post-swap
+    traffic against stale context. Post-swap requests re-commit and match
+    a scheduler born with the new weights."""
+    cfg = _cfg()
+    p_old = init_params(jax.random.PRNGKey(0), cfg)
+    p_new = init_params(jax.random.PRNGKey(1), cfg)
+    ctx, cands = _request_material(seed=6)
+    sched = ServeScheduler(p_old, cfg, n_slots=2, capacity=64,
+                           buckets=(8, 16, 32))
+    sched.submit(ctx, cands)
+    sched.run()                                     # block now retained
+    sched.update_params(p_new, version=1)
+    rid = sched.submit(ctx, cands)                  # same context, new w
+    got = sched.run()[rid]
+    assert got.shared_prefix_tokens == 0            # no stale sharing
+    fresh = ServeScheduler(p_new, cfg, n_slots=2, capacity=64,
+                           buckets=(8, 16, 32))
+    rid2 = fresh.submit(ctx, cands)
+    np.testing.assert_allclose(np.asarray(got.scores),
+                               np.asarray(fresh.run()[rid2].scores),
+                               atol=1e-6)
+
+
+def test_retained_blocks_survive_runs_and_steal():
+    """Retained contexts persist across run() calls; when every row is
+    retained a fresh unrelated request steals the LRU block and scores
+    correctly."""
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(4), cfg)
+    sched = ServeScheduler(params, cfg, n_slots=2, capacity=64,
+                           buckets=(8, 16, 32))
+    material = [_request_material(seed=20 + i, n_ctx=3, k=2)
+                for i in range(3)]
+    for ctx, cands in material[:2]:                 # fill + retain both rows
+        sched.submit(ctx, cands)
+        sched.run()
+    assert all(r.retained for r in sched._rows)
+    np.testing.assert_array_equal(
+        np.asarray(sched.cache["ref"]), [1, 1])     # retention holds
+    ctx, cands = material[2]                        # unrelated: steals LRU
+    rid = sched.submit(ctx, cands)
+    res = sched.run()[rid]
+    want = _independent_scores(params, cfg, ctx, cands, max_len=96)
+    np.testing.assert_allclose(np.asarray(res.scores), want, atol=1e-4)
+    assert res.shared_prefix_tokens == 0

@@ -21,13 +21,15 @@ def _sched(params, cfg, **kw):
 
 
 @pytest.mark.parametrize("attn_type", ["gqa", "mla"])
-def test_scheduler_matches_independent_prefills(attn_type):
+@pytest.mark.parametrize("attn_impl", ["dense", "pallas"])
+def test_scheduler_matches_independent_prefills(attn_type, attn_impl):
     """Decode bursts against the shared context cache == k standalone
-    sliding-window prefills (the acceptance bar of the serving subsystem)."""
+    sliding-window prefills (the acceptance bar of the serving subsystem),
+    on both the dense decode path and the fused Pallas kernel."""
     cfg = _cfg(attn_type)
     params = init_params(jax.random.PRNGKey(0), cfg)
     ctx, cands = _request_material(seed=3)
-    sched = _sched(params, cfg)
+    sched = _sched(params, cfg, attn_impl=attn_impl)
     rid = sched.submit(ctx, cands)
     res = sched.run()[rid]
     want = _independent_scores(params, cfg, ctx, cands, max_len=96)
@@ -36,13 +38,14 @@ def test_scheduler_matches_independent_prefills(attn_type):
     assert 0.0 < res.cache_hit_fraction < 1.0
 
 
-def test_scheduler_windowed_matches_independent():
+@pytest.mark.parametrize("attn_impl", ["dense", "pallas"])
+def test_scheduler_windowed_matches_independent(attn_impl):
     """The window term must bind identically on the prefill and burst paths."""
     cfg = _cfg()
     params = init_params(jax.random.PRNGKey(4), cfg)
     ctx, cands = _request_material(seed=4, n_ctx=5)
     W = 8
-    sched = _sched(params, cfg, window=W)
+    sched = _sched(params, cfg, window=W, attn_impl=attn_impl)
     rid = sched.submit(ctx, cands)
     res = sched.run()[rid]
     want = _independent_scores(params, cfg, ctx, cands, max_len=96, window=W)
@@ -66,7 +69,7 @@ def test_eviction_and_readmission():
     rids = [sched.submit(ctx, cands) for ctx, cands in reqs]
     res = sched.run()
     assert len(res) == len(reqs)
-    assert all(s is None for s in sched._slots)  # everything evicted
+    assert all(not r.active for r in sched._rows)  # everything evicted
     for rid, want in zip(rids, solo):
         np.testing.assert_allclose(res[rid].scores, want, atol=1e-5)
 
