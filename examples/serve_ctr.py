@@ -80,9 +80,13 @@ sched = ServeScheduler(params, cfg, n_slots=2, capacity=128,
                        buckets=(16, 32, 64))
 rid = sched.submit(context, candidates)
 res = sched.run()[rid]
+tel = sched.telemetry()
 print(f"scheduler: scored {K} candidates in {sched.n_steps} decode steps, "
       f"{res.cache_hit_fraction:.0%} of prompt tokens served from the "
       f"shared-context cache")
+print(f"  latency {res.latency_s*1e3:.1f} ms = queue {res.queue_s*1e3:.1f}"
+      f" + service {res.service_s*1e3:.1f}; bucket histogram "
+      f"{tel['bucket_steps']} (bursts never inflate the jit shape)")
 
 # same scores as one sliding-window prompt per candidate (part 1's path)
 naive = CTRServer(params, cfg, max_len=128)

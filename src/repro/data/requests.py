@@ -41,7 +41,9 @@ from repro.data.synthetic import CTRDataset
 
 def make_request_stream(ds: CTRDataset, *, n_requests: int, k: int,
                         n_ctx: int, seed: int = 0,
-                        repeat_frac: float = 0.0) -> List[Dict]:
+                        repeat_frac: float = 0.0,
+                        n_ctx_tail: int = None,
+                        tail_alpha: float = 1.5) -> List[Dict]:
     """Draw ``n_requests`` requests: a random user's ``n_ctx`` consecutive
     interactions (with rating tokens) as context, and ``k`` random items
     (without ratings) as the candidate slate. Returns dicts with ``context``
@@ -52,15 +54,27 @@ def make_request_stream(ds: CTRDataset, *, n_requests: int, k: int,
     freshly drawn candidate slate — the traffic shape cross-request prefix
     sharing exploits (one user paging through results, or a hot context).
 
+    ``n_ctx_tail`` (> ``n_ctx``) switches the per-request context length
+    from the constant ``n_ctx`` to a heavy-tailed draw: ``n_ctx`` plus a
+    Pareto(``tail_alpha``) excess, clamped to ``n_ctx_tail`` interactions.
+    Most requests stay near ``n_ctx``; a few are much longer — the
+    mixed-length traffic shape whose tail a batched scheduler must not let
+    one long prefill impose on every co-batched short slate (the
+    ``--ctx-heavy-tail`` workload of benchmarks/serve_bench.py). Alpha 1.5
+    is the classic infinite-variance web-traffic tail.
+
     Draw order per request (fixed so seeded runs are byte-deterministic):
-    [revisit coin + source index when ``repeat_frac > 0``,] user id,
-    context window offset, then the k candidate item ids; revisits skip
-    the user/offset draws. ``repeat_frac=0`` draws exactly the historical
-    sequence, so pre-existing seeded streams are unchanged.
+    [revisit coin + source index when ``repeat_frac > 0``,] [context
+    length when ``n_ctx_tail`` is set,] user id, context window offset,
+    then the k candidate item ids; revisits skip the length/user/offset
+    draws (they copy their source's context). Defaults draw exactly the
+    historical sequence, so pre-existing seeded streams are unchanged.
     """
     rng = np.random.default_rng(seed)
     out = []
     n_items = len(ds.item_tokens)
+    if n_ctx_tail is not None:
+        assert n_ctx_tail >= n_ctx, "n_ctx_tail must be >= n_ctx"
     for _ in range(n_requests):
         revisit = None
         if repeat_frac > 0.0 and out:
@@ -70,12 +84,16 @@ def make_request_stream(ds: CTRDataset, *, n_requests: int, k: int,
             u = revisit["user"]
             context = [list(it) for it in revisit["context"]]
         else:
+            n_i = n_ctx
+            if n_ctx_tail is not None:
+                n_i = min(n_ctx + int(n_ctx * float(rng.pareto(tail_alpha))),
+                          n_ctx_tail)
             u = int(rng.integers(0, len(ds.sequences)))
             toks, _ = ds.user_prompt_material(u)
-            assert len(toks) >= n_ctx, (
-                f"user history {len(toks)} < n_ctx {n_ctx}")
-            lo = int(rng.integers(0, len(toks) - n_ctx + 1))
-            context = [[int(t) for t in it] for it in toks[lo: lo + n_ctx]]
+            assert len(toks) >= n_i, (
+                f"user history {len(toks)} < context length {n_i}")
+            lo = int(rng.integers(0, len(toks) - n_i + 1))
+            context = [[int(t) for t in it] for it in toks[lo: lo + n_i]]
         cands = rng.integers(0, n_items, size=k)
         out.append({
             "user": u,

@@ -28,6 +28,12 @@ maintains is ``ref[row] == (#active requests on the row) + (1 if the row's
 context is retained for future reuse else 0)`` — so a finished request's
 context survives eviction exactly as long as something (an in-flight
 sharer, or the retention policy) still holds a reference.
+
+The cache is donated through every jitted op that rewrites it, and the
+scheduler always rebinds from the op's return — a single linear chain of
+cache values. That chain is also what makes one-step-ahead overlap
+dispatch safe: step t+1 consumes step t's output cache on device, so step
+ordering is a data dependency, not a host-side sync.
 """
 from __future__ import annotations
 

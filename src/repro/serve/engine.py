@@ -30,6 +30,10 @@ analog of the training paradigm; docs/serving.md):
 * ``make_decode_fn``'s ``valid``/``commit``/``seg`` operands — chunked
   context prefill into the cache once, then non-committing segment-isolated
   candidate bursts against it (driven by ``repro.serve.scheduler``).
+  Committed KV depends only on (token, logical position) — never on which
+  step wrote it — so a context committed in budget-cut chunks of any size
+  is byte-identical to a monolithic commit; this is what lets the
+  scheduler cut chunk boundaries freely for tail latency.
 """
 from __future__ import annotations
 

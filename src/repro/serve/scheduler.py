@@ -1,5 +1,6 @@
-"""Continuous-batching CTR serving with shared-context KV reuse and
-cross-request prefix sharing.
+"""Continuous-batching CTR serving with shared-context KV reuse,
+cross-request prefix sharing, token-budgeted chunked prefill and
+one-step-ahead overlap scheduling.
 
 The paper's training trick — isolate k targets against one shared context
 instead of re-encoding the context k times — applied at inference. A request
@@ -7,8 +8,8 @@ is one user context plus k candidate items; the end-to-end LLM-ranker
 deployment shape (one user, many candidates per page view). Per request the
 scheduler:
 
-  1. prefills the context once into the request's cache rows (chunked,
-     committed decode steps — decode == prefill, see tests/test_serve.py);
+  1. prefills the context once into the request's cache rows (committed
+     decode chunks — decode == prefill, see tests/test_serve.py);
   2. scores candidates as *non-committing bursts*: a burst attends the
      cached context plus itself, reads p(click) at each [SUM] slot, and
      leaves the cache's pos/cursor untouched — the next burst sees the
@@ -37,18 +38,45 @@ never recompiles. ``attn_impl="pallas"`` runs every step through the fused
 decode-attention kernel (`repro.kernels.decode_attn`) instead of the dense
 einsums.
 
+Two hot-path policies keep the batched step latency-uniform under
+mixed-length traffic (the tail-latency killer: one long user history
+stalling every co-batched short slate):
+
+* **Token-budgeted chunked prefill.** Pending context commits are held as
+  *resumable* per-slot prefill state (`_Prefill`), not pre-cut chunks.
+  Each step packs decode bursts first — they alone pick the wave's bucket
+  — then cuts prefill chunks to whatever fits ``min(bucket,
+  prefill_budget)``. A long prefill therefore rides along a few tokens at
+  a time without ever inflating the wave's jit shape, and resumes
+  mid-context on the next step. (``monolithic_prefill=True`` restores the
+  pre-budget behaviour — largest-bucket chunks that drag every
+  co-scheduled burst into the largest jit shape — as a reference mode for
+  `benchmarks/serve_bench.py`.)
+* **One-step-ahead overlap.** The decode step is dispatched async; its
+  scores are *not* synced before the next step is built and dispatched
+  from already-decided host state. Harvest (the only
+  ``np.asarray``/device sync) runs one step behind, so admission, unit
+  packing and row bookkeeping overlap the device step instead of
+  serializing with it. Correctness rides on the cache being threaded
+  through every decode call: step t+1's dispatch consumes step t's output
+  cache, so device-side ordering (commit-before-burst, trim-before-
+  recommit) is a data dependency, never a host sync.
+
 Cost: per request O(n^2 + k·n·s) attention reads instead of the O(k·n^2) of
 re-prefilling the context per candidate — less again whatever prefix
 sharing removes; ``RequestResult.cached_tokens`` tracks the prompt tokens
 served from cache (own-context reuse + shared prefixes) instead of
-recomputed.
+recomputed. ``telemetry()`` reports queue depth, per-bucket step counts,
+prefill-budget utilization and watchdog state; ``RequestResult`` splits
+latency into ``queue_s`` (submit → admitted) and ``service_s`` (admitted →
+last score) so tail regressions are attributable.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -67,6 +95,9 @@ class RequestResult:
     rid: int
     scores: List[float]                # p(click) per candidate, in order
     latency_s: float                   # submit -> last candidate scored
+                                       # (== queue_s + service_s)
+    queue_s: float                     # submit -> admitted onto a row
+    service_s: float                   # admitted -> last candidate scored
     context_tokens: int                # logical context length n (incl. BOS)
     prefill_tokens: int                # context tokens this request committed
     burst_tokens: int                  # tokens fed in non-committing bursts
@@ -99,13 +130,35 @@ class _Unit:
 
 
 @dataclasses.dataclass
+class _Prefill:
+    """Resumable committed-context work: ``tokens`` land at positions
+    ``start .. start+len-1``; ``done`` of them have already been cut into
+    dispatched chunks. Chunk size is decided per step (`_build_wave`) from
+    the wave's bucket and the prefill token budget — never fixed at
+    admission — so a long context commits across many small steps."""
+    tokens: List[int]
+    start: int
+    done: int = 0
+
+    @property
+    def remaining(self) -> int:
+        return len(self.tokens) - self.done
+
+
+@dataclasses.dataclass
 class _Slot:
     """One in-flight request (possibly one of several sharing a row)."""
     rid: int
     row: int
-    units: deque                       # its remaining _Units, FIFO
+    units: deque                       # its remaining burst _Units, FIFO
+    prefill: Optional[_Prefill]        # resumable context commit (None when
+                                       # nothing to commit)
+    context: List[int]                 # full flattened context incl. [BOS]
+                                       # (kept for mid-prefill restart on a
+                                       # weight hot-swap)
     scores: List[Optional[float]]
     submit_t: float
+    admit_t: float                     # when the request landed on its row
     n_context: int                     # logical context length n
     prefill_tokens: int
     burst_tokens: int                  # all non-commit feeds (suffix copies
@@ -121,13 +174,13 @@ class _Row:
     """Host-side state of one cache row (one batch index of the KV cache).
 
     ``committed`` is the row's context block — the token sequence whose KV
-    occupies slots ``0..len-1`` once ``pending_commit`` reaches 0 (commit
-    units still queued/running are counted there; a row is *sharable* only
-    at ``pending_commit == 0``, enforced by ``_try_place``). ``active``
-    are the requests currently scoring bursts against the block;
-    ``retained`` marks an inactive row whose block is kept (and
-    refcounted) for future prefix reuse. The cache-side refcount invariant
-    is ``ref == len(active) + retained``.
+    occupies slots ``0..len-1`` once ``pending_commit`` reaches 0 (the
+    number of active slots whose prefill has not fully dispatched; a row
+    is *sharable* only at ``pending_commit == 0``, enforced by
+    ``_try_place``). ``active`` are the requests currently scoring bursts
+    against the block; ``retained`` marks an inactive row whose block is
+    kept (and refcounted) for future prefix reuse. The cache-side refcount
+    invariant is ``ref == len(active) + retained``.
     """
     committed: List[int] = dataclasses.field(default_factory=list)
     pending_commit: int = 0
@@ -137,6 +190,7 @@ class _Row:
                                        # serving in-flight readers, never
                                        # share with or retain for new ones
     last_used: int = 0                 # step counter, for LRU steal
+    last_progress: int = 0             # step counter, for the watchdog
     rr: int = 0                        # round-robin pointer over active
 
 
@@ -161,6 +215,29 @@ class ServeScheduler:
 
     ``attn_impl`` picks the decode attention path ("dense", "pallas", or
     None = follow ``cfg.attn_impl``); see ``make_decode_fn``.
+
+    Scheduling policy knobs:
+
+    * ``prefill_budget`` — max committed context tokens dispatched per
+      step, across all rows (None = one largest-bucket worth,
+      ``buckets[-1]``). Decode bursts are packed first and alone size the
+      wave's bucket; prefill chunks are then cut to
+      ``min(bucket, budget remaining)``, so prefill progress rides along
+      without inflating any co-scheduled burst's jit shape.
+    * ``monolithic_prefill`` — restore the pre-budget behaviour (context
+      chunks cut at ``buckets[-1]``, inflating the whole wave's bucket)
+      as a reference/baseline mode; ``prefill_budget`` is ignored.
+    * ``overlap`` — keep one decode step in flight: dispatch step t+1
+      before syncing step t's scores (default True). Commit gating, row
+      op ordering and hot-swap invalidation stay correct because the
+      cache threads every call (device-order data dependency); the only
+      observable difference is that row reuse and admission run one step
+      behind request completion.
+    * ``watchdog_steps`` — a row holding undispatchable backlog for more
+      than this many steps (or a request still unfinished when ``run``
+      drains) increments ``watchdog_fired`` and is recorded in
+      ``telemetry()`` — a stalled/never-draining row is a scheduler bug
+      surfaced rather than a silent hang.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 8,
@@ -169,7 +246,11 @@ class ServeScheduler:
                  sp: SpecialTokens = SpecialTokens(),
                  yes_id: int = 3, no_id: int = 4, cache_dtype=jnp.float32,
                  attn_impl: Optional[str] = None,
-                 share_prefix: bool = True, min_shared_prefix: int = 4):
+                 share_prefix: bool = True, min_shared_prefix: int = 4,
+                 prefill_budget: Optional[int] = None,
+                 monolithic_prefill: bool = False,
+                 overlap: bool = True,
+                 watchdog_steps: int = 256):
         if window is None:
             window = cfg.window          # match make_prefill_fn's default
         self.params = params
@@ -181,6 +262,13 @@ class ServeScheduler:
         self.attn_impl = attn_impl
         self.share_prefix = share_prefix
         self.min_shared_prefix = max(int(min_shared_prefix), 1)
+        if prefill_budget is None:
+            prefill_budget = self.buckets[-1]
+        assert prefill_budget >= 1, "prefill_budget must be >= 1"
+        self.prefill_budget = int(prefill_budget)
+        self.monolithic_prefill = bool(monolithic_prefill)
+        self.overlap = bool(overlap)
+        self.watchdog_steps = int(watchdog_steps)
         # the cache is donated to every jitted op that rewrites it: KV
         # tensors alias straight through (bookkeeping ops touch int32 only)
         # instead of being copied per call — the scheduler always rebinds
@@ -200,12 +288,96 @@ class ServeScheduler:
         self._pending = self._fresh_pending()
         self._results: Dict[int, RequestResult] = {}
         self._next_rid = 0
+        self._inflight: deque = deque()  # dispatched, un-harvested steps
+        self._prefill_rr = 0             # rotates budget priority over rows
         self.n_steps = 0
         self.shared_admissions = 0       # requests that reused a prefix
         self._param_source = None
         self._poll_every = 1
         self._poll_tick = 0
         self.params_version: Optional[int] = None
+        self.reset_stats()
+
+    # -- telemetry -----------------------------------------------------------
+
+    def reset_stats(self) -> None:
+        """Zero the step/telemetry counters (benchmarks call this after
+        warmup so compile steps don't pollute the measured run). In-flight
+        state, retained blocks and results are untouched."""
+        self.n_steps = 0
+        self.shared_admissions = 0
+        self.watchdog_fired = 0
+        self.watchdog_stuck_rids: List[int] = []
+        self._watchdog_rows: set = set()
+        self._bucket_steps: Dict[int, int] = {int(b): 0 for b in self.buckets}
+        self._qdepth_sum = 0
+        self._qdepth_max = 0
+        self._qdepth_n = 0
+        self._budget_used = 0
+        self._budget_avail = 0
+        self._starved_steps = 0
+        for r in self._rows:
+            r.last_used = 0
+            r.last_progress = 0
+
+    def telemetry(self) -> Dict[str, Any]:
+        """Scheduler-health counters since construction / ``reset_stats``:
+
+        * ``bucket_steps``        — decode steps per jit bucket shape (the
+          tail-latency fingerprint: monolithic prefill piles steps into
+          the largest bucket, the token budget keeps burst waves small);
+        * ``queue_depth_mean/max``— submitted-but-unadmitted requests,
+          sampled once per dispatched step after admission;
+        * ``prefill_budget`` / ``prefill_tokens`` / ``budget_utilization``
+          — the per-step budget, committed tokens actually dispatched and
+          dispatched / available-under-demand (None when
+          ``monolithic_prefill`` disables the budget);
+        * ``prefill_starved_steps`` — steps where some row's prefill got
+          nothing because the budget ran out (rotation keeps this fair);
+        * ``watchdog_fired`` / ``watchdog_rows`` / ``watchdog_stuck_rids``
+          — stalled-row detections (see ``watchdog_steps``).
+        """
+        util = (self._budget_used / self._budget_avail
+                if self._budget_avail else None)
+        return {
+            "steps": int(self.n_steps),
+            "overlap": bool(self.overlap),
+            "bucket_steps": {int(b): int(c)
+                             for b, c in sorted(self._bucket_steps.items())},
+            "queue_depth_mean": (self._qdepth_sum / self._qdepth_n
+                                 if self._qdepth_n else 0.0),
+            "queue_depth_max": int(self._qdepth_max),
+            "prefill_budget": (None if self.monolithic_prefill
+                               else int(self.prefill_budget)),
+            "prefill_tokens": int(self._budget_used),
+            "budget_utilization": (None if self.monolithic_prefill else util),
+            "prefill_starved_steps": int(self._starved_steps),
+            "watchdog_fired": int(self.watchdog_fired),
+            "watchdog_rows": sorted(int(i) for i in self._watchdog_rows),
+            "watchdog_stuck_rids": list(self.watchdog_stuck_rids),
+        }
+
+    def warmup(self) -> None:
+        """Pre-compile the decode step for every bucket shape with an
+        all-invalid, non-committing wave. No row state changes (invalid
+        slots write pos −1 that ``commit=False`` discards), so serving
+        traffic never hits a compile mid-request."""
+        for s in self.buckets:
+            z = np.zeros((self.n_slots, s), np.int32)
+            f = np.zeros((self.n_slots, s), bool)
+            p, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(z), jnp.asarray(z),
+                jnp.asarray(f), jnp.asarray(f),
+                jnp.asarray(np.zeros((self.n_slots,), bool)),
+                jnp.asarray(np.full((self.n_slots, s), -1, np.int32)))
+        # the row-op jits too (no-op masks/counts), so the first real
+        # admission/eviction doesn't pay their compiles mid-run
+        none = jnp.asarray(np.zeros((self.n_slots,), bool))
+        zc = jnp.asarray(np.zeros((self.n_slots,), np.int32))
+        self.cache = self._free(self.cache, zc)
+        self.cache = self._trim(self.cache, none, zc)
+        self.cache = self._retain(self.cache, zc)
+        jax.block_until_ready(self.cache["pos"])
 
     # -- weight hot-swap -----------------------------------------------------
 
@@ -236,20 +408,41 @@ class ServeScheduler:
         keep serving them (the documented mixed-version contract for
         requests straddling a swap, docs/streaming.md) but are flagged
         ``stale`` — never matched for new sharing, and freed instead of
-        retained when their last reader leaves."""
+        retained when their last reader leaves.
+
+        A row whose context is **still committing** when the swap lands is
+        *restarted* instead: mixing weight versions inside one context
+        block would make the block's KV internally inconsistent (worse
+        than the documented whole-version straddle), so the row's slots
+        are rolled back to empty (``trim_slots`` at keep=0 — enqueued
+        after any in-flight chunk, the cache data dependency orders it)
+        and the committer re-commits its full context from position 0
+        under the new weights. Chunked and monolithic prefill therefore
+        score identically across a mid-prefill swap."""
         self.params = params
         if version is not None:
             self.params_version = version
-        if self.share_prefix:
-            for i, r in enumerate(self._rows):
-                if not r.committed:
-                    continue
-                if r.active:
-                    r.stale = True
-                else:                              # idle retention hold
-                    self._trie.remove(r.committed, i)
-                    r.committed, r.retained = [], False
-                    self._mark("free", i)
+        for i, r in enumerate(self._rows):
+            committer = self._committer(r) if r.pending_commit > 0 else None
+            if committer is not None:
+                n = len(committer.context)
+                committer.prefill = _Prefill(tokens=list(committer.context),
+                                             start=0)
+                # accounting restarts with the prefill: the request now
+                # commits its full context itself (any shared prefix it
+                # had borrowed predates the swap)
+                committer.prefill_tokens = n
+                committer.shared_prefix_tokens = 0
+                self._mark("trim", i, keep=0)
+                continue
+            if not self.share_prefix or not r.committed:
+                continue
+            if r.active:
+                r.stale = True
+            else:                              # idle retention hold
+                self._trie.remove(r.committed, i)
+                r.committed, r.retained = [], False
+                self._mark("free", i)
 
     # -- request intake ------------------------------------------------------
 
@@ -268,31 +461,20 @@ class ServeScheduler:
         ctx = [self.sp.bos]
         for it in context:
             ctx.extend(it)
-        longest = max(len(c) + 1 for c in candidates)
+        j_long = max(range(len(candidates)),
+                     key=lambda j: len(candidates[j]))
+        longest = len(candidates[j_long]) + 1
         assert longest <= self.buckets[-1], (
-            f"candidate burst {longest} > largest bucket {self.buckets[-1]}")
+            f"request {rid}: candidate {j_long} burst {longest} tokens "
+            f"> largest bucket {self.buckets[-1]}")
         assert len(ctx) + longest <= self.capacity, (
-            f"context {len(ctx)} + burst {longest} > capacity {self.capacity}")
+            f"request {rid}: context {len(ctx)} + candidate {j_long} "
+            f"burst {longest} > capacity {self.capacity}")
         self._queue.append((rid, ctx, [list(c) for c in candidates],
                             time.perf_counter()))
         return rid
 
     # -- unit construction ---------------------------------------------------
-
-    def _commit_units(self, tokens: List[int], start: int) -> List[_Unit]:
-        """Committed context chunks for ``tokens`` at positions
-        ``start..start+len-1``, largest-bucket sized."""
-        chunk = self.buckets[-1]
-        units = []
-        for lo in range(0, len(tokens), chunk):
-            part = tokens[lo: lo + chunk]
-            units.append(_Unit(
-                tokens=np.asarray(part, np.int32),
-                positions=np.arange(start + lo, start + lo + len(part),
-                                    dtype=np.int32),
-                is_sum=np.zeros(len(part), bool),
-                seg=np.full(len(part), -1, np.int32), commit=True))
-        return units
 
     def _burst_units(self, candidates: List[List[int]], n: int,
                      suffix: List[int], burst_cap: int
@@ -392,7 +574,8 @@ class ServeScheduler:
                candidates: List[List[int]], t0: float, *,
                shared_depth: int, commit_from: int,
                suffix_in_burst: bool) -> None:
-        """Build the request's unit queue on ``row``.
+        """Build the request's work on ``row``: resumable prefill state for
+        the context tokens no committed block covers, plus its burst queue.
 
         ``shared_depth``   — context prefix reused from the row's block;
         ``commit_from``    — first context index this request commits
@@ -404,11 +587,11 @@ class ServeScheduler:
         """
         n = len(ctx)
         r = self._rows[row]
-        units: deque = deque()
         to_commit = ctx[commit_from:]
+        prefill = None
         if to_commit:
-            units.extend(self._commit_units(to_commit, commit_from))
-            r.pending_commit += len(units)
+            prefill = _Prefill(tokens=list(to_commit), start=commit_from)
+            r.pending_commit += 1
             if r.committed:
                 self._trie.remove(r.committed, row)
             r.committed = list(ctx)
@@ -421,9 +604,10 @@ class ServeScheduler:
         burst_cap = min(self.buckets[-1], self.capacity - committed_len)
         bursts, burst_total = self._burst_units(candidates, n, suffix,
                                                 burst_cap)
-        units.extend(bursts)
-        slot = _Slot(rid=rid, row=row, units=units,
+        slot = _Slot(rid=rid, row=row, units=deque(bursts), prefill=prefill,
+                     context=list(ctx),
                      scores=[None] * len(candidates), submit_t=t0,
+                     admit_t=time.perf_counter(),
                      n_context=n, prefill_tokens=len(to_commit),
                      burst_tokens=burst_total,
                      slate_tokens=sum(len(c) + 1 for c in candidates),
@@ -451,7 +635,7 @@ class ServeScheduler:
            immutable while others read it). Needs suffix + largest
            candidate to fit one bucket. The block may still be committing
            (a same-wave admission): the sharer's bursts are gated behind
-           the commits by ``_next_unit``.
+           the commits by ``_build_wave``.
         3. **trim a retained block** — an inactive row sharing only a
            proper prefix: roll the block back to the shared prefix
            (`trim_slots`), then commit the rest, as in 1.
@@ -473,7 +657,7 @@ class ServeScheduler:
                 # a busy block may still have commits in flight (its
                 # committer was admitted this very wave): sharers can be
                 # placed anyway — their bursts are gated behind the
-                # commits by `_next_unit`, never reading a half-written
+                # commits by `_build_wave`, never reading a half-written
                 # block
                 busy = [i for i in sorted(end_rows)
                         if not self._rows[i].stale and self._rows[i].active]
@@ -535,25 +719,110 @@ class ServeScheduler:
 
     # -- the batched step ----------------------------------------------------
 
+    @staticmethod
+    def _committer(r: _Row) -> Optional[_Slot]:
+        """The row's active slot with prefill still to dispatch (at most
+        one: only idle-row admissions commit)."""
+        for s in r.active:
+            if s.prefill is not None and s.prefill.remaining > 0:
+                return s
+        return None
+
     def _next_unit(self, r: _Row) -> Optional[Tuple[_Slot, _Unit]]:
-        """Round-robin the row's active requests; a request's own units
-        stay FIFO (commits before bursts). While the row has commits in
-        flight (``pending_commit > 0``) only commit units may run: a
-        sharer admitted onto a mid-commit block waits here instead of
-        bursting against a half-written context. At most one active slot
-        holds commit units (only idle-row admissions commit), so the gate
-        cannot deadlock — the committer's own units are never gated."""
+        """Round-robin the row's active requests' burst queues. Only called
+        on rows with no commits in flight (``pending_commit == 0``): while
+        a context is still committing, ``_build_wave`` schedules prefill
+        chunks instead, so a sharer admitted onto a mid-commit block waits
+        there rather than bursting against a half-written context."""
         if not r.active:
             return None
         for off in range(len(r.active)):
             slot = r.active[(r.rr + off) % len(r.active)]
             if not slot.units:
                 continue
-            if r.pending_commit > 0 and not slot.units[0].commit:
-                continue                       # bursts wait for the block
             r.rr = (r.rr + off + 1) % len(r.active)
             return slot, slot.units.popleft()
         return None
+
+    def _build_wave(self) -> Optional[Tuple[List[Tuple[int, _Slot, _Unit]],
+                                            int]]:
+        """Pack one batched step: decode bursts first (they alone pick the
+        wave's bucket unless ``monolithic_prefill``), then cut resumable
+        prefill chunks into the remaining rows under the token budget.
+        Advances prefill cursors and pops burst units — callers must
+        dispatch exactly what is returned. None when nothing can run."""
+        work: List[Tuple[int, _Slot, _Unit]] = []
+        pending: List[Tuple[int, _Slot]] = []
+        for i, r in enumerate(self._rows):
+            if r.pending_commit > 0:
+                c = self._committer(r)
+                if c is not None:
+                    pending.append((i, c))
+                continue                   # bursts wait for the block
+            picked = self._next_unit(r)
+            if picked is not None:
+                work.append((i, picked[0], picked[1]))
+        if not work and not pending:
+            return None
+        if pending:
+            # rotate which row gets budget first, so a tight budget
+            # round-robins across competing prefills instead of starving
+            # the highest-numbered rows
+            self._prefill_rr += 1
+            off = self._prefill_rr % len(pending)
+            pending = pending[off:] + pending[:off]
+        if self.monolithic_prefill:
+            # pre-budget behaviour: prefill chunks are largest-bucket
+            # sized and inflate the whole wave's jit shape
+            budget = None
+            need = max([len(u.tokens) for _, _, u in work]
+                       + [min(c.prefill.remaining, self.buckets[-1])
+                          for _, c in pending])
+        else:
+            budget = self.prefill_budget
+            if work:
+                need = max(len(u.tokens) for _, _, u in work)
+            else:
+                # prefill-only wave: no burst to keep small, so every
+                # pending row fills a chunk — the budget caps the bucket
+                # (and so the chunk), not the wave's total tokens, else a
+                # drained pipeline would commit slower than monolithic
+                # for no latency benefit
+                need = min(max(c.prefill.remaining for _, c in pending),
+                           budget)
+        s = next(b for b in self.buckets
+                 if b >= min(need, self.buckets[-1]))
+        left = s * len(pending) if (budget is None or not work) else budget
+        cap0 = left
+        used = demand = 0
+        starved = False
+        for i, c in pending:
+            pf = c.prefill
+            demand += pf.remaining
+            take = min(pf.remaining, s, left)
+            if take <= 0:
+                starved = True
+                continue
+            work.append((i, c, _Unit(
+                tokens=np.asarray(pf.tokens[pf.done:pf.done + take],
+                                  np.int32),
+                positions=np.arange(pf.start + pf.done,
+                                    pf.start + pf.done + take,
+                                    dtype=np.int32),
+                is_sum=np.zeros(take, bool),
+                seg=np.full(take, -1, np.int32), commit=True)))
+            pf.done += take
+            left -= take
+            used += take
+            if pf.remaining == 0:
+                self._rows[i].pending_commit -= 1
+        if pending:
+            self._budget_used += used
+            if budget is not None:
+                self._budget_avail += min(cap0, demand)
+                if starved:
+                    self._starved_steps += 1
+        return work, s
 
     def _finish(self, slot: _Slot, now: float) -> None:
         """Harvested the request's last [SUM]: record the result and drop
@@ -576,6 +845,8 @@ class ServeScheduler:
         self._results[slot.rid] = RequestResult(
             rid=slot.rid, scores=list(slot.scores),
             latency_s=now - slot.submit_t,
+            queue_s=slot.admit_t - slot.submit_t,
+            service_s=now - slot.admit_t,
             context_tokens=n, prefill_tokens=slot.prefill_tokens,
             burst_tokens=slot.burst_tokens,
             shared_prefix_tokens=slot.shared_prefix_tokens,
@@ -597,11 +868,48 @@ class ServeScheduler:
                 r.committed = []
             self._mark("free", slot.row)
 
+    def _harvest_one(self) -> bool:
+        """Sync the oldest in-flight step's scores (the only host<->device
+        sync on the hot path), record them, retire finished requests and
+        flush their reference drops. Returns False when nothing was in
+        flight."""
+        if not self._inflight:
+            return False
+        p, work, _ = self._inflight.popleft()
+        p = np.asarray(p)
+        now = time.perf_counter()
+        for row, slot, u in work:
+            for j, off in u.score_at:
+                slot.scores[j] = float(p[row, off])
+            # a slot finishes on the harvest that fills its last score —
+            # never on queue emptiness, which overlap races (units are
+            # popped at dispatch, one step ahead of this harvest)
+            if u.score_at and all(sc is not None for sc in slot.scores):
+                self._finish(slot, now)
+        self._flush_row_ops()          # departing readers' refs drop once
+        return True
+
+    def _watchdog_scan(self, scheduled: set) -> None:
+        """Flag rows holding backlog that has not dispatched for more than
+        ``watchdog_steps`` steps — a stall (gating bug, corrupted row
+        state) surfaced as a counter instead of a silent hang."""
+        for i, r in enumerate(self._rows):
+            backlog = any(s.units or (s.prefill is not None
+                                      and s.prefill.remaining > 0)
+                          for s in r.active)
+            if not backlog or i in scheduled:
+                r.last_progress = self.n_steps
+            elif (self.n_steps - r.last_progress > self.watchdog_steps
+                  and i not in self._watchdog_rows):
+                self._watchdog_rows.add(i)
+                self.watchdog_fired += 1
+
     def step(self) -> bool:
-        """Admit queued requests (strict FIFO, as many as place), run one
-        batched decode step over every busy row's next work unit, harvest
-        scores, retire finished requests. Returns False when queue and
-        rows are both drained (nothing happened)."""
+        """Admit queued requests (strict FIFO, as many as place), dispatch
+        one batched decode step over every busy row's next work unit, and
+        harvest scores — one step behind the dispatch when ``overlap`` is
+        on, immediately otherwise. Returns False when queue, rows and the
+        in-flight pipeline are all drained (nothing happened)."""
         if self._param_source is not None:
             # dedicated counter: n_steps stalls on idle calls, which would
             # either re-poll every call or never poll again
@@ -610,6 +918,17 @@ class ServeScheduler:
                 if update is not None:
                     self.update_params(update[1], update[0])
             self._poll_tick += 1
+        # un-lag the pipeline when it pays: harvest an in-flight step
+        # before admission if (a) it's free — the device already finished
+        # it — or (b) requests are queued and the step is known (at
+        # dispatch time) to finish a request, so harvesting releases a row
+        # this wave's admission can use. (b) trades one step of overlap
+        # for a row exactly when rows are the bottleneck; under light load
+        # the pipeline stays a full step ahead.
+        while self._inflight and (
+                self._inflight[0][0].is_ready()
+                or (self._queue and self._inflight[0][2])):
+            self._harvest_one()
         while self._queue:
             rid, ctx, cands, t0 = self._queue[0]
             if not self._try_place(rid, ctx, cands, t0):
@@ -617,15 +936,10 @@ class ServeScheduler:
             self._queue.popleft()
         self._flush_row_ops()          # steals/trims land before the decode
 
-        work = []
-        for i, r in enumerate(self._rows):
-            picked = self._next_unit(r)
-            if picked is not None:
-                work.append((i, picked[0], picked[1]))
-        if not work:
-            return False
-        need = max(len(u.tokens) for _, _, u in work)
-        s = next(b for b in self.buckets if b >= need)
+        wave = self._build_wave()
+        if wave is None:
+            return self._harvest_one()     # drain the pipeline tail
+        work, s = wave
 
         tokens = np.zeros((self.n_slots, s), np.int32)
         positions = np.zeros((self.n_slots, s), np.int32)
@@ -642,32 +956,47 @@ class ServeScheduler:
             valid[row, :m] = True
             commit[row] = u.commit
 
+        # async dispatch: p stays on device until this step is harvested
         p, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(tokens),
             jnp.asarray(positions), jnp.asarray(is_sum),
             jnp.asarray(valid), jnp.asarray(commit), jnp.asarray(seg))
         self.n_steps += 1
-        p = np.asarray(p)
-
-        now = time.perf_counter()
-        for row, slot, u in work:
-            r = self._rows[row]
-            r.last_used = self.n_steps
-            if u.commit:
-                r.pending_commit -= 1
-            for j, off in u.score_at:
-                slot.scores[j] = float(p[row, off])
-            if not slot.units:                       # request done
-                self._finish(slot, now)
-        self._flush_row_ops()          # departing readers' refs drop once
+        self._bucket_steps[s] = self._bucket_steps.get(s, 0) + 1
+        qd = len(self._queue)
+        self._qdepth_sum += qd
+        self._qdepth_n += 1
+        self._qdepth_max = max(self._qdepth_max, qd)
+        scheduled = set()
+        for row, _, _u in work:
+            self._rows[row].last_used = self.n_steps
+            scheduled.add(row)
+        self._watchdog_scan(scheduled)
+        # decidable at dispatch (units pop at dispatch): does this step
+        # carry some request's final [SUM]? drives the queued-harvest rule
+        finishes = any(u.score_at and not slot.units
+                       and (slot.prefill is None
+                            or slot.prefill.remaining == 0)
+                       for _, slot, u in work)
+        self._inflight.append((p, work, finishes))
+        if not self.overlap or len(self._inflight) > 1:
+            self._harvest_one()
         return True
 
     def run(self) -> Dict[int, RequestResult]:
-        """Drain queue and rows; returns results for every request scored
-        since the last ``run``. Retained context blocks survive across
-        ``run`` calls, so later traffic still shares them."""
+        """Drain queue, rows and the in-flight pipeline; returns results
+        for every request scored since the last ``run``. Retained context
+        blocks survive across ``run`` calls, so later traffic still shares
+        them. A request left unfinished after the drain (a stalled row —
+        scheduler bug or corrupted state) fires the watchdog instead of
+        hanging; its rid is recorded in ``telemetry()``."""
         while self.step():
             pass
+        stuck = sorted([s.rid for r in self._rows for s in r.active]
+                       + [q[0] for q in self._queue])
+        if stuck:
+            self.watchdog_fired += 1
+            self.watchdog_stuck_rids = stuck
         out, self._results = self._results, {}
         return out
 

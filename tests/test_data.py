@@ -78,6 +78,31 @@ class TestStreams:
             assert all(isinstance(t, int) for it in req["context"]
                        for t in it)
 
+    def test_request_stream_heavy_tail_bounds_and_determinism(self):
+        """Heavy-tailed context lengths: per-request lengths span
+        [n_ctx, n_ctx_tail], stay byte-deterministic per seed, and leave
+        the default (constant-length) stream byte-identical to before."""
+        kw = dict(n_requests=24, k=3, n_ctx=4, seed=9, n_ctx_tail=16)
+        a = make_request_stream(self._ds(), **kw)
+        b = make_request_stream(self._ds(), **kw)
+        assert a == b
+        lens = [len(r["context"]) for r in a]
+        assert min(lens) >= 4 and max(lens) <= 16
+        assert len(set(lens)) > 1                # actually mixed-length
+        # the tail knob must not perturb the default draw sequence
+        base = dict(n_requests=12, k=4, n_ctx=5, seed=7)
+        assert (make_request_stream(self._ds(), **base)
+                == make_request_stream(self._ds(), **base, n_ctx_tail=None))
+
+    def test_request_stream_heavy_tail_revisits_copy_source_length(self):
+        """Revisits copy their source's (possibly long) context verbatim,
+        so prefix sharing still sees exact repeats under the tail."""
+        kw = dict(n_requests=30, k=2, n_ctx=3, seed=11, n_ctx_tail=12,
+                  repeat_frac=0.5)
+        reqs = make_request_stream(self._ds(), **kw)
+        ctxs = [tuple(tuple(it) for it in r["context"]) for r in reqs]
+        assert len(set(ctxs)) < len(ctxs)        # some exact repeats
+
     def test_event_stream_same_seed_byte_identical(self):
         kw = dict(n_ticks=4, start_frac=0.5, end_frac=0.9, seed=5)
         a = make_event_stream(self._ds(), **kw)

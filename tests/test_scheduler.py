@@ -126,6 +126,145 @@ def test_tight_capacity_burst_packing():
     np.testing.assert_allclose(np.asarray(res.scores), want, atol=1e-4)
 
 
+@pytest.mark.parametrize("attn_impl", ["dense", "pallas"])
+@pytest.mark.parametrize("overlap", [True, False])
+def test_chunked_prefill_matches_monolithic(attn_impl, overlap):
+    """A context committed via budget-cut chunks (here budget 5, far below
+    the largest bucket) must score byte-identically to the pre-budget
+    monolithic largest-bucket chunking: chunking only changes *when* KV
+    lands in the cache, never what a burst attends."""
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(7), cfg)
+    ctx, cands = _request_material(seed=40, n_ctx=10)   # 41 ctx tokens
+    kw = dict(buckets=(8, 16), capacity=64, attn_impl=attn_impl)
+
+    mono = _sched(params, cfg, monolithic_prefill=True, overlap=False, **kw)
+    rid = mono.submit(ctx, cands)
+    want = mono.run()[rid].scores
+
+    chunked = _sched(params, cfg, prefill_budget=5, overlap=overlap, **kw)
+    rid = chunked.submit(ctx, cands)
+    res = chunked.run()[rid]
+    np.testing.assert_array_equal(np.asarray(res.scores), np.asarray(want))
+    # the budget really did split the commit across steps
+    assert chunked.n_steps > mono.n_steps
+    tel = chunked.telemetry()
+    assert tel["prefill_tokens"] == 41
+    assert tel["watchdog_fired"] == 0
+
+
+def test_chunked_prefill_never_inflates_burst_bucket():
+    """The latency-uniformity contract: with a long prefill and a short
+    burst co-batched, budgeted scheduling must keep every wave in the
+    smallest bucket (bursts pick the shape; chunks are cut to fit), where
+    monolithic prefill drags waves into the largest bucket."""
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(8), cfg)
+    ctx_long, _ = _request_material(seed=41, n_ctx=10)  # 41 tokens to commit
+    ctx_short, _ = _request_material(seed=42, n_ctx=1)
+    cands = [[10, 11]]                                  # 3-token bursts
+
+    def bucket_hist(**kw):
+        s = _sched(params, cfg, buckets=(8, 32), capacity=96, **kw)
+        s.submit(ctx_long, cands)
+        s.submit(ctx_short, cands)
+        s.run()
+        return s.telemetry()["bucket_steps"]
+
+    mono = bucket_hist(monolithic_prefill=True, overlap=False)
+    assert mono[32] > 0                     # prefill inflated the wave
+    budgeted = bucket_hist(prefill_budget=8)
+    assert budgeted[32] == 0                # nothing ever left bucket 8
+    assert budgeted[8] > 0
+
+
+@pytest.mark.parametrize("attn_impl", ["dense", "pallas"])
+def test_hot_swap_mid_prefill_restarts_under_new_params(attn_impl):
+    """A weight swap landing while a context is still committing must not
+    leave mixed-version KV inside one block: the commit restarts from
+    position 0 under the new params, and the final scores are
+    byte-identical to a fresh scheduler that only ever saw the new
+    params."""
+    cfg = _cfg()
+    p_old = init_params(jax.random.PRNGKey(9), cfg)
+    p_new = init_params(jax.random.PRNGKey(10), cfg)
+    ctx, cands = _request_material(seed=43, n_ctx=10)   # 41 ctx tokens
+    kw = dict(buckets=(8,), capacity=64, prefill_budget=8,
+              attn_impl=attn_impl)
+
+    sched = _sched(p_old, cfg, **kw)
+    rid = sched.submit(ctx, cands)
+    sched.step()                             # a few old-param chunks land
+    sched.step()
+    assert any(r.pending_commit > 0 for r in sched._rows)  # mid-prefill
+    sched.update_params(p_new)
+    res = sched.run()[rid]
+
+    fresh = _sched(p_new, cfg, **kw)
+    rid2 = fresh.submit(ctx, cands)
+    want = fresh.run()[rid2].scores
+    np.testing.assert_array_equal(np.asarray(res.scores), np.asarray(want))
+    # restart accounting: the full context was (re)committed by this request
+    assert res.prefill_tokens == 41 and res.shared_prefix_tokens == 0
+
+
+def test_watchdog_flags_stalled_row_and_run_terminates():
+    """A row whose backlog can never dispatch (here: a corrupted commit
+    gate with no committer to drain it) must fire the watchdog and let
+    ``run`` drain everything else instead of hanging."""
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(11), cfg)
+    ctx_a, cands_a = _request_material(seed=44, n_ctx=2, k=3)
+    ctx_b, _ = _request_material(seed=45, n_ctx=2)
+    cands_b = [[8 + j, 9 + j] for j in range(12)]       # many bursts
+    sched = _sched(params, cfg, buckets=(8,), watchdog_steps=2)
+    rid_a = sched.submit(ctx_a, cands_a)
+    rid_b = sched.submit(ctx_b, cands_b)
+    sched.step()                             # both admitted
+    row_a = next(r for r in sched._rows
+                 if r.active and r.active[0].rid == rid_a)
+    while sched._committer(row_a) is not None:
+        sched.step()                         # drain rid_a's real prefill
+    row_a.pending_commit = 1                 # gate bursts forever
+    res = sched.run()
+    tel = sched.telemetry()
+    assert tel["watchdog_fired"] >= 1
+    assert rid_a in tel["watchdog_stuck_rids"]
+    assert rid_a not in res                  # stuck, surfaced — not hung
+    assert len(res[rid_b].scores) == 12      # everyone else drained fine
+
+
+def test_latency_split_queue_plus_service():
+    """queue_s (submit -> admitted) + service_s (admitted -> last score)
+    must partition latency_s exactly, and queueing must actually register
+    when requests outnumber rows."""
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(12), cfg)
+    reqs = [_request_material(seed=50 + i, n_ctx=3, k=3) for i in range(5)]
+    sched = _sched(params, cfg, n_slots=2, share_prefix=False)
+    rids = [sched.submit(ctx, cands) for ctx, cands in reqs]
+    res = sched.run()
+    for rid in rids:
+        r = res[rid]
+        assert r.queue_s >= 0.0 and r.service_s > 0.0
+        assert r.latency_s == pytest.approx(r.queue_s + r.service_s,
+                                            abs=1e-9)
+    # 5 requests through 2 rows: the later ones demonstrably queued
+    assert max(res[r].queue_s for r in rids) > 0.0
+
+
+def test_submit_rejections_name_request_and_candidate():
+    """Oversized submissions must say *which* request and candidate were
+    rejected, so bench/stream integrations can log the offender."""
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(13), cfg)
+    sched = _sched(params, cfg, buckets=(8,), capacity=16)
+    with pytest.raises(AssertionError, match=r"request 7: candidate 1 "):
+        sched.submit([[10, 11]], [[12, 13], list(range(20, 40))], rid=7)
+    with pytest.raises(AssertionError, match=r"request 9: context 13 "):
+        sched.submit([[20 + i] for i in range(12)], [[12, 13, 14]], rid=9)
+
+
 def test_request_stream_feeds_scheduler():
     """The synthetic request generator produces schedulable requests."""
     cfg = _cfg()
