@@ -20,11 +20,18 @@ per request), all producing the same p(click) per candidate:
     retained/refcounted so later requests reuse matching prefixes. Runs the
     current scheduling policy: token-budgeted chunked prefill +
     one-step-ahead overlap.
+  * ``scheduler_per_slot`` — the same scheduler on the per-slot contiguous
+    cache layout (``paged=False``): prefix reuse works only while the
+    owning row survives, so its ``cross_row_hits`` are 0 by construction.
+    The side-by-side baseline for the paged layout's radix page index
+    (``paged_vs_per_slot`` in the artifact: cross-row hits, prefix hit
+    rate, pages in use, evictions); on a revisit-heavy stream the run
+    exits nonzero if the paged scheduler serves no cross-row hits.
   * ``scheduler_monolithic`` — the same scheduler with the pre-budget
     policy (``monolithic_prefill=True``, no overlap): prefill chunks cut at
     the largest bucket, inflating every co-batched burst's jit shape, and a
-    device sync per step. Kept as the side-by-side reference the tentpole's
-    p99 win is measured against.
+    device sync per step. Kept as the side-by-side reference for the
+    chunked-prefill p99 win.
   * ``scheduler_pallas`` (with ``--attn-impl pallas``) — the budgeted +
     overlap scheduler run through the fused Pallas decode-attention kernel
     (``repro.kernels.decode_attn``; interpret mode off-TPU) instead of the
@@ -145,11 +152,14 @@ def run_multi_target(params, cfg, requests, max_len):
 
 def run_scheduler(params, cfg, requests, *, n_slots, capacity, buckets,
                   attn_impl="dense", monolithic=False, overlap=True,
-                  arrival_s=0.0, reps=1):
+                  arrival_s=0.0, reps=1, paged=True):
     """Continuous batching: shared-context cache + non-committing bursts +
     cross-request prefix sharing, on the dense or Pallas decode path.
     ``monolithic=True`` runs the pre-budget chunking (+ per-step sync) as
-    the reference policy. ``arrival_s`` > 0 paces submissions at that
+    the reference policy. ``paged=False`` runs the per-slot contiguous
+    cache layout (no page pool, no radix page index) — the baseline the
+    paged layout's cross-row prefix hits are measured against; scores are
+    identical either way. ``arrival_s`` > 0 paces submissions at that
     inter-arrival gap (open-loop traffic: per-request latency measures the
     requests actually in flight together, not the whole drain's makespan);
     0 submits everything up front (batch drain). ``reps`` repeats the
@@ -166,7 +176,7 @@ def run_scheduler(params, cfg, requests, *, n_slots, capacity, buckets,
                                capacity=capacity, window=cfg.window,
                                buckets=buckets, attn_impl=attn_impl,
                                monolithic_prefill=monolithic,
-                               overlap=overlap)
+                               overlap=overlap, paged=paged)
         sched.warmup()                       # compile every bucket shape
         sched.reset_stats()
         t0 = time.perf_counter()
@@ -306,6 +316,13 @@ def main():
         "scheduler": run_scheduler(params, cfg, requests, n_slots=args.slots,
                                    capacity=capacity, buckets=buckets,
                                    arrival_s=arrival_s, reps=reps),
+        # the per-slot contiguous cache, recorded side by side: its
+        # prefix reuse dies with the row (cross_row_hits == 0 by
+        # construction), which is exactly what the paged radix index is
+        # measured against on revisit-heavy streams
+        "scheduler_per_slot": run_scheduler(
+            params, cfg, requests, n_slots=args.slots, capacity=capacity,
+            buckets=buckets, arrival_s=arrival_s, reps=reps, paged=False),
         # the pre-change policy, recorded side by side so the budgeted +
         # overlap p99 win is measured, not asserted
         "scheduler_monolithic": run_scheduler(
@@ -313,7 +330,8 @@ def main():
             buckets=buckets, monolithic=True, overlap=False,
             arrival_s=arrival_s, reps=reps),
     }
-    shared_modes = ["multi_target", "scheduler", "scheduler_monolithic"]
+    shared_modes = ["multi_target", "scheduler", "scheduler_per_slot",
+                    "scheduler_monolithic"]
     if args.attn_impl == "pallas":
         # single rep: interpret-mode wall time tracks correctness, not the
         # policy comparison (excluded from p99_improvement below), so
@@ -366,6 +384,23 @@ def main():
             and name != "scheduler_monolithic"
             and modes[name]["decode_impl"]
             == modes["scheduler_monolithic"]["decode_impl"]},
+        # the tentpole's headline: prefix reuse that survives row
+        # eviction. per_slot's cross_row_hits are structurally 0 (its
+        # prefixes die with the row); the paged radix index must serve
+        # revisits that arrive after their source row was stolen.
+        "paged_vs_per_slot": {
+            "cross_row_hits": modes["scheduler"]["telemetry"]
+                              ["cross_row_hits"],
+            "cross_row_tokens": modes["scheduler"]["telemetry"]
+                                ["cross_row_tokens"],
+            "prefix_hit_rate_paged": modes["scheduler"]["telemetry"]
+                                     ["prefix_hit_rate"],
+            "prefix_hit_rate_per_slot": modes["scheduler_per_slot"]
+                                        ["telemetry"]["prefix_hit_rate"],
+            "pages_in_use": modes["scheduler"]["telemetry"]["pages_in_use"],
+            "page_evictions": modes["scheduler"]["telemetry"]
+                              ["page_evictions"],
+        },
     }
     if args.json:
         with open(args.json, "w") as f:
@@ -383,6 +418,21 @@ def main():
         if tel and tel["watchdog_fired"]:
             bad.append(f"{name}: watchdog fired "
                        f"(stuck rids {tel['watchdog_stuck_rids']})")
+    # cross-row regression gate: on a revisit-heavy stream with more
+    # distinct contexts than rows, some revisits necessarily arrive after
+    # their source row was reused — the paged radix index must serve them
+    # (per-slot scores 0 here by design; a 0 on the paged path means the
+    # index silently stopped working)
+    if args.repeat_frac > 0 and n_requests >= 4 * args.slots:
+        pvs = result["paged_vs_per_slot"]
+        if pvs["cross_row_hits"] <= 0:
+            bad.append(
+                f"paged scheduler served 0 cross-row prefix hits on a "
+                f"revisit-heavy stream (repeat_frac={args.repeat_frac}, "
+                f"{n_requests} requests / {args.slots} slots) — per-slot "
+                f"baseline hit rate "
+                f"{pvs['prefix_hit_rate_per_slot']:.3f}, paged "
+                f"{pvs['prefix_hit_rate_paged']:.3f}")
     if bad:
         print(f"[serve_bench] INVALID RUN: {'; '.join(bad)}",
               file=sys.stderr)

@@ -21,6 +21,11 @@ exercise realistic token-length distributions:
 ``ContextTrie`` indexes committed context token sequences so admission can
 find, in O(|new context|), the deepest already-cached prefix of an
 incoming request (see docs/serving.md for the sharing model).
+``RadixTree`` is its path-compressed successor: the same owner API plus a
+page layer mapping full pages of committed prefixes to KV pool pages
+(``repro.serve.pages``), so prefixes survive row eviction and are reusable
+across every cache row. The scheduler uses ``RadixTree``; ``ContextTrie``
+remains as the reference hash-trie implementation.
 
 Determinism contract: every draw comes from one ``np.random.default_rng``
 (PCG64) in a fixed, documented order, and every emitted value is a plain
@@ -176,7 +181,10 @@ class ContextTrie:
           ``through_depth`` tokens with ``tokens`` but continue past it —
           reusable only by trimming back to the shared prefix).
 
-        Empty sets / depth 0 when nothing matches.
+        Empty sets / depth 0 when nothing matches. In particular a
+        first-token mismatch reports ``through_owners == set()``, *not* the
+        root's through set (which holds every owner): a depth-0 "match"
+        shares nothing, so there is nothing to reuse.
         """
         node = self._root
         end_depth, end_owners = 0, set()
@@ -189,7 +197,326 @@ class ContextTrie:
             depth += 1
             if node["ends"]:
                 end_depth, end_owners = depth, set(node["ends"])
+        if depth == 0:
+            return end_depth, end_owners, 0, set()
         return end_depth, end_owners, depth, set(node["through"])
+
+
+class _RadixNode:
+    """One path-compressed node: the edge from its parent spans logical
+    depths ``(start, start + len(edge)]``."""
+
+    __slots__ = ("edge", "start", "kids", "ends", "through", "pages",
+                 "last_used", "parent")
+
+    def __init__(self, edge: List[int], start: int, parent):
+        self.edge = edge            # token label on the edge from parent
+        self.start = start          # depth at which this edge begins
+        self.kids: Dict[int, "_RadixNode"] = {}   # first edge token -> child
+        self.ends = set()           # owners whose sequence ends at self.end
+        self.through = set()        # owners whose sequence covers >= self.end
+        self.pages: Dict[int, int] = {}   # page index -> pool page id
+        self.last_used = 0
+        self.parent = parent
+
+    @property
+    def end(self) -> int:
+        return self.start + len(self.edge)
+
+
+class RadixTree:
+    """Path-compressed radix tree over context token sequences, with an
+    optional **page layer** indexing the KV-cache pages that hold each
+    full page of a committed prefix (see ``repro.serve.pages.PagePool``
+    and docs/serving.md).
+
+    Drop-in upgrade of :class:`ContextTrie` for the scheduler's admission
+    ladder: the owner API (``insert``/``remove``/``match``/
+    ``owner_length``) has identical semantics — including the fixed
+    depth-0 contract: a first-token mismatch returns empty owner sets,
+    never the root's — but nodes are O(live branching points), not O(live
+    tokens). On top of it, three page-layer calls make prefixes reusable
+    across *all* rows, not just rows whose block is still retained:
+
+    * ``attach_pages(tokens, pages)`` — publish the pool pages holding the
+      full pages of ``tokens`` (the index takes one pool reference per
+      page it newly adopts; the caller performs the incref).
+    * ``match_pages(tokens)`` — longest contiguous indexed page run
+      covering a prefix of ``tokens`` (what a new admission can map into
+      its page table instead of recomputing).
+    * ``evict_pages(need, page_ref)`` — reclaim least-recently-used pages
+      held *only* by the index (pool refcount 1), deepest-first within a
+      node so contiguous prefixes shrink from the tail.
+
+    Page nodes may outlive their owners (a stolen row's prefix stays
+    indexed until evicted); owner removal never prunes a node that still
+    holds pages.
+    """
+
+    def __init__(self, page_size: int = 0):
+        self._root = _RadixNode([], 0, None)
+        self._len: Dict[object, int] = {}       # owner -> |its sequence|
+        self._page_size = int(page_size)
+        self._clock = 0
+
+    def __len__(self) -> int:
+        return len(self._len)
+
+    def owner_length(self, owner) -> int:
+        """Length of the sequence ``owner`` currently owns (KeyError if
+        absent)."""
+        return self._len[owner]
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def _split(self, child: _RadixNode, j: int) -> _RadixNode:
+        """Split ``child``'s edge after ``j`` tokens; return the new upper
+        node. Owners and pages redistribute by the spans they cover."""
+        parent = child.parent
+        upper = _RadixNode(child.edge[:j], child.start, parent)
+        parent.kids[upper.edge[0]] = upper
+        child.edge = child.edge[j:]
+        child.start += j
+        child.parent = upper
+        upper.kids[child.edge[0]] = child
+        # every owner below the split covers the upper span too; nobody can
+        # end exactly at the new boundary yet (that would have split earlier)
+        upper.through = set(child.through)
+        upper.last_used = child.last_used
+        if self._page_size:
+            ps = self._page_size
+            moved = [p for p in child.pages if (p + 1) * ps <= upper.end]
+            for p in moved:
+                upper.pages[p] = child.pages.pop(p)
+        return upper
+
+    def _extend_path(self, tokens: Sequence[int]) -> List[_RadixNode]:
+        """Create/split nodes so the path spelling ``tokens`` ends on a node
+        boundary; return the nodes along it (root excluded), each fully
+        covered by ``tokens``."""
+        node, i, n = self._root, 0, len(tokens)
+        path: List[_RadixNode] = []
+        while i < n:
+            t = int(tokens[i])
+            child = node.kids.get(t)
+            if child is None:
+                child = _RadixNode([int(x) for x in tokens[i:]], i, node)
+                node.kids[t] = child
+                path.append(child)
+                return path
+            e = child.edge
+            j, m = 0, min(len(e), n - i)
+            while j < m and e[j] == int(tokens[i + j]):
+                j += 1
+            if j == len(e):
+                path.append(child)
+                node, i = child, i + j
+                continue
+            upper = self._split(child, j)
+            path.append(upper)
+            if i + j == n:
+                return path
+            node, i = upper, i + j
+            # next iteration diverges from the lower half -> fresh leaf
+        return path
+
+    def insert(self, tokens: Sequence[int], owner) -> None:
+        assert owner not in self._len, f"owner {owner!r} already in tree"
+        clock = self._tick()
+        self._root.through.add(owner)
+        path = self._extend_path(tokens)
+        for nd in path:
+            nd.through.add(owner)
+            nd.last_used = clock
+        (path[-1] if path else self._root).ends.add(owner)
+        self._len[owner] = len(tokens)
+
+    def _maybe_prune(self, node: _RadixNode) -> None:
+        while (node is not self._root and not node.through and not node.ends
+               and not node.kids and not node.pages):
+            parent = node.parent
+            del parent.kids[node.edge[0]]
+            node = parent
+
+    def remove(self, tokens: Sequence[int], owner) -> None:
+        assert self._len.get(owner) == len(tokens), (
+            f"owner {owner!r} does not own a length-{len(tokens)} sequence")
+        self._root.through.discard(owner)
+        node, i = self._root, 0
+        while i < len(tokens):
+            child = node.kids[int(tokens[i])]
+            assert child.edge == [int(t) for t in
+                                  tokens[i:i + len(child.edge)]], (
+                "owner path must lie on node boundaries")
+            child.through.discard(owner)
+            node, i = child, i + len(child.edge)
+        node.ends.discard(owner)
+        del self._len[owner]
+        self._maybe_prune(node)
+
+    def match(self, tokens: Sequence[int]) -> Tuple[int, set, int, set]:
+        """Identical contract to :meth:`ContextTrie.match` — see its
+        docstring; depth 0 always reports empty owner sets."""
+        node, i, n = self._root, 0, len(tokens)
+        depth, thr = 0, set()
+        end_depth, end_owners = 0, set()
+        clock = self._tick()
+        while i < n:
+            child = node.kids.get(int(tokens[i]))
+            if child is None:
+                break
+            e = child.edge
+            j, m = 0, min(len(e), n - i)
+            while j < m and e[j] == int(tokens[i + j]):
+                j += 1
+            child.last_used = clock
+            depth = i + j
+            thr = child.through
+            i += j
+            if j < len(e):
+                break
+            if child.ends:
+                end_depth, end_owners = depth, set(child.ends)
+            node = child
+        if depth == 0:
+            return 0, set(), 0, set()
+        return end_depth, end_owners, depth, set(thr)
+
+    # -- page layer ---------------------------------------------------------
+
+    def attach_pages(self, tokens: Sequence[int],
+                     pages: Sequence[int]) -> List[int]:
+        """Index pool pages covering ``tokens[:len(pages) * page_size]``;
+        ``pages[i]`` holds tokens ``[i*ps, (i+1)*ps)``. Returns the page
+        ids *newly* adopted (the caller takes one pool reference per
+        returned id); indices already indexed keep their existing id."""
+        ps = self._page_size
+        assert ps > 0, "tree built without a page_size"
+        assert len(tokens) >= len(pages) * ps
+        path = self._extend_path([int(t) for t in tokens[:len(pages) * ps]])
+        clock = self._tick()
+        new: List[int] = []
+        k = 0
+        for nd in path:
+            nd.last_used = clock
+            while k < len(pages) and (k + 1) * ps <= nd.end:
+                if k not in nd.pages:
+                    nd.pages[k] = int(pages[k])
+                    new.append(int(pages[k]))
+                k += 1
+        assert k == len(pages)
+        return new
+
+    def match_pages(self, tokens: Sequence[int]) -> Tuple[int, List[int]]:
+        """Longest contiguous indexed page run covering a prefix of
+        ``tokens``: returns ``(covered_tokens, page_ids)`` with
+        ``covered_tokens == len(page_ids) * page_size``."""
+        ps = self._page_size
+        assert ps > 0, "tree built without a page_size"
+        node, i, n = self._root, 0, len(tokens)
+        clock = self._tick()
+        got: List[int] = []
+        while i < n:
+            child = node.kids.get(int(tokens[i]))
+            if child is None:
+                break
+            e = child.edge
+            j, m = 0, min(len(e), n - i)
+            while j < m and e[j] == int(tokens[i + j]):
+                j += 1
+            child.last_used = clock
+            depth = i + j
+            while ((len(got) + 1) * ps <= depth
+                   and len(got) in child.pages):
+                got.append(child.pages[len(got)])
+            if j < len(e) or (len(got) + 1) * ps <= depth:
+                break                     # diverged, exhausted, or page gap
+            node, i = child, depth
+        return len(got) * ps, got
+
+    def evict_pages(self, need: int, page_ref) -> List[int]:
+        """Drop up to ``need`` least-recently-used pages held only by the
+        index (``page_ref[pid] == 1``), deepest-first within a node.
+        Returns the evicted page ids; the caller releases the pool
+        reference for each."""
+        nodes, stack = [], [self._root]
+        while stack:
+            nd = stack.pop()
+            stack.extend(nd.kids.values())
+            if nd.pages:
+                nodes.append(nd)
+        nodes.sort(key=lambda nd: (nd.last_used, -nd.start))
+        out: List[int] = []
+        for nd in nodes:
+            if len(out) >= need:
+                break
+            for pidx in sorted(nd.pages, reverse=True):
+                if len(out) >= need:
+                    break
+                pid = nd.pages[pidx]
+                if page_ref[pid] == 1:
+                    del nd.pages[pidx]
+                    out.append(pid)
+            self._maybe_prune(nd)
+        return out
+
+    def drop_pages(self, tokens: Sequence[int], from_page: int) -> List[int]:
+        """Un-index the pages covering ``tokens[from_page * page_size:]``
+        (global page index ``>= from_page`` along the matching path).
+        Returns the dropped page ids; the caller releases the index's
+        pool reference for each. Used when a trim needs to recommit into
+        a partially-covered boundary page: dropping the boundary (and the
+        now-unreachable deeper pages behind it) makes it private again,
+        so the rewrite cannot corrupt a prefix some future adoption would
+        map in. Pages other rows still read keep their row references —
+        only the index's hold is released."""
+        ps = self._page_size
+        assert ps > 0, "tree built without a page_size"
+        node, i, n = self._root, 0, len(tokens)
+        out: List[int] = []
+        touched: List[_RadixNode] = []
+        while i < n:
+            child = node.kids.get(int(tokens[i]))
+            if child is None:
+                break
+            e = child.edge
+            j, m = 0, min(len(e), n - i)
+            while j < m and e[j] == int(tokens[i + j]):
+                j += 1
+            touched.append(child)
+            for pidx in [p for p in child.pages if p >= from_page]:
+                out.append(child.pages.pop(pidx))
+            if j < len(e):
+                break
+            node, i = child, i + j
+        for nd in reversed(touched):
+            self._maybe_prune(nd)
+        return out
+
+    def drop_all_pages(self) -> List[int]:
+        """Flush the whole page layer (weight hot-swap: indexed KV was
+        computed under the old parameters). Returns every held page id."""
+        out, stack, seen = [], [self._root], []
+        while stack:
+            nd = stack.pop()
+            stack.extend(nd.kids.values())
+            seen.append(nd)
+            out.extend(nd.pages.values())
+            nd.pages.clear()
+        for nd in reversed(seen):
+            self._maybe_prune(nd)
+        return out
+
+    def held_pages(self) -> int:
+        """Number of pages currently held by the index (telemetry)."""
+        n, stack = 0, [self._root]
+        while stack:
+            nd = stack.pop()
+            stack.extend(nd.kids.values())
+            n += len(nd.pages)
+        return n
 
 
 def make_event_stream(ds: CTRDataset, *, n_ticks: int,
@@ -261,5 +588,5 @@ def stream_digest(stream) -> str:
     return hashlib.sha256(blob).hexdigest()
 
 
-__all__ = ["make_request_stream", "ContextTrie", "make_event_stream",
-           "warm_histories", "stream_digest"]
+__all__ = ["make_request_stream", "ContextTrie", "RadixTree",
+           "make_event_stream", "warm_histories", "stream_digest"]

@@ -58,6 +58,16 @@ The full serve feature set is fused:
 Queries with no attendable key (fully padded rows) produce exactly zero
 output, matching the dense path's ``any_ok`` guard. All index/flag
 operands are int32 (no sub-byte loads); scores accumulate in fp32.
+
+**Paged caches need no kernel changes.** When the scheduler runs the
+paged KV layout (`repro.serve.cache` with a page table), the engine
+gathers each row's pages into logical-slot order *before* this op —
+``k``/``v``/``pos_k``/``seg_k`` arrive as the same per-row ``(B, cap,
+...)`` views a contiguous cache would produce, holding identical values
+at identical logical slots (RoPE is applied per-row positions on the
+gathered view, so it cannot move inside the kernel). The kernel
+therefore computes bit-identical outputs for paged and contiguous
+layouts; see ``make_decode_fn`` and tests/test_paged_cache.py.
 """
 from __future__ import annotations
 

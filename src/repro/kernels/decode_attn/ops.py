@@ -14,7 +14,12 @@ kernel in ``decode_attn.py``. Differences from the training op:
   under ``jax.lax.stop_gradient`` semantics by construction);
 * the capacity axis is padded to a kv-block multiple with ``pos = -1``
   slots, which the kernel's occupancy skip drops — arbitrary scheduler
-  capacities stay legal without degrading the block size.
+  capacities stay legal without degrading the block size;
+* paged KV reaches this op already gathered: the engine resolves each
+  row's page table to a logical-slot-ordered ``(B, cap, ...)`` view
+  before calling (``repro.serve.cache.physical_slots``), so the op's
+  contract — and its outputs — are identical for paged and contiguous
+  caches.
 
 ``interpret=None`` auto-resolves via ``repro.kernels.default_interpret``
 (Mosaic on TPU, the Pallas interpreter elsewhere so the kernel *body* is

@@ -1,5 +1,9 @@
 """Decode KV caches: full-length and ring-buffer (windowed), GQA and MLA,
-with refcounted context blocks for cross-request prefix sharing.
+with refcounted context blocks for cross-request prefix sharing, in two
+layouts — contiguous per-row capacity, or a global page pool addressed
+through per-row page tables (``init_lm_cache(page_size=...)``; allocation
+state lives host-side in ``repro.serve.pages.PagePool``, the prefix index
+in ``repro.data.requests.RadixTree``; see docs/serving.md).
 
 Layout: per-layer tensors are stacked on a leading L dim so the decode step
 can ``lax.scan`` over (layer params, layer cache) — HLO stays O(1) in depth.
@@ -61,35 +65,104 @@ Cache = Dict[str, Any]
 
 
 def init_lm_cache(cfg: ModelConfig, batch: int, capacity: int,
-                  *, dtype=jnp.bfloat16) -> Cache:
+                  *, dtype=jnp.bfloat16, page_size: int = None,
+                  n_pages: int = None) -> Cache:
+    """Allocate a decode cache.
+
+    Contiguous layout (``page_size=None``): KV tensors carry a per-row
+    capacity axis — ``(L, B, cap, ...)`` — and a row's committed context
+    lives at physical slots ``0..cursor-1`` of its own row.
+
+    Paged layout (``page_size`` set): KV tensors carry one **global** slot
+    axis of ``n_pages * page_size`` physical slots shared by every row —
+    ``(L, n_pages * page_size, ...)`` — and each row addresses it through
+    ``page_table (B, max_pages) int32`` of pool page ids (-1 = unmapped,
+    ``max_pages = capacity // page_size``). Logical slot ``j`` of a row
+    lives at physical slot ``page_table[row, j // ps] * ps + j % ps`` (see
+    ``physical_slots``). ``pos``/``cursor``/``ref`` keep their contiguous
+    meaning — they are logical-per-row either way — so the scheduler's
+    bookkeeping ops are layout-agnostic. Allocation/refcounting of the
+    global pages is host-side state (``repro.serve.pages.PagePool``); the
+    device only ever sees the page tables.
+    """
     l = cfg.n_layers
+    if page_size is not None:
+        assert capacity % page_size == 0, (
+            f"paged capacity {capacity} must be a multiple of "
+            f"page_size {page_size}")
+        assert n_pages is not None and n_pages > 0
+        kv_rows, kv_cap = 1, n_pages * page_size     # global slot axis
+    else:
+        kv_rows, kv_cap = batch, capacity
     if cfg.attn_type == "mla":
         tensors = {
-            "ckv": jnp.zeros((l, batch, capacity, cfg.kv_lora_rank), dtype),
-            "kpe": jnp.zeros((l, batch, capacity, cfg.qk_rope_dim), dtype),
+            "ckv": jnp.zeros((l, kv_rows, kv_cap, cfg.kv_lora_rank), dtype),
+            "kpe": jnp.zeros((l, kv_rows, kv_cap, cfg.qk_rope_dim), dtype),
         }
     else:
         hk, dk = cfg.n_kv_heads, cfg.hd
         tensors = {
-            "k": jnp.zeros((l, batch, capacity, hk, dk), dtype),
-            "v": jnp.zeros((l, batch, capacity, hk, dk), dtype),
+            "k": jnp.zeros((l, kv_rows, kv_cap, hk, dk), dtype),
+            "v": jnp.zeros((l, kv_rows, kv_cap, hk, dk), dtype),
         }
+    if page_size is not None:
+        tensors = {k: v[:, 0] for k, v in tensors.items()}   # (L, n_tot, ...)
+        tensors["page_table"] = jnp.full((batch, capacity // page_size), -1,
+                                         jnp.int32)
     tensors["pos"] = jnp.full((batch, capacity), -1, jnp.int32)
     tensors["cursor"] = jnp.zeros((batch,), jnp.int32)
     tensors["ref"] = jnp.zeros((batch,), jnp.int32)
     return tensors
 
 
+def is_paged(cache: Cache) -> bool:
+    """True when the cache uses the global page-pool layout."""
+    return "page_table" in cache
+
+
+def page_size_of(cache: Cache) -> int:
+    """Static page size of a paged cache (tokens per page)."""
+    cap = cache["pos"].shape[1]
+    return cap // cache["page_table"].shape[1]
+
+
+def physical_slots(cache: Cache):
+    """Logical→physical slot map of a paged cache: (B, cap) int32 into the
+    global KV slot axis, -1 where the logical slot's page is unmapped.
+
+    This is the gather map both the dense decode path and the Pallas
+    decode kernel read KV through: gathering the KV pool with (the
+    clamped) map yields the same per-row ``(B, cap, ...)`` view the
+    contiguous layout stores directly, and ``pos = -1`` masking makes the
+    unmapped entries unattendable exactly like empty contiguous slots.
+    """
+    pt = cache["page_table"]
+    ps = page_size_of(cache)
+    batch = pt.shape[0]
+    base = pt[:, :, None] * ps + jnp.arange(ps, dtype=jnp.int32)[None, None]
+    flat = jnp.where(pt[:, :, None] < 0, -1, base)
+    return flat.reshape(batch, -1)
+
+
 def cache_shape(cfg: ModelConfig, batch: int, capacity: int,
-                *, dtype=jnp.bfloat16) -> Dict[str, tuple]:
+                *, dtype=jnp.bfloat16, page_size: int = None,
+                n_pages: int = None) -> Dict[str, tuple]:
     """Shapes/dtypes without allocation (dry-run input specs)."""
     import jax
     return jax.eval_shape(lambda: init_lm_cache(cfg, batch, capacity,
-                                                dtype=dtype))
+                                                dtype=dtype,
+                                                page_size=page_size,
+                                                n_pages=n_pages))
 
 
 def slot_indices(cache: Cache, s_new: int, *, ring: bool):
-    """Slots the next ``s_new`` tokens occupy: (B, s_new) int32."""
+    """Logical slots the next ``s_new`` tokens occupy: (B, s_new) int32.
+
+    Non-ring indices are *not* wrapped or clamped: a commit that would run
+    past ``capacity`` must be rejected at admission time (the scheduler
+    raises with the rid and lengths named — see ``ServeScheduler.submit``)
+    rather than relying on out-of-bounds scatter writes being dropped.
+    """
     cap = cache["pos"].shape[1]
     idx = cache["cursor"][:, None] + jnp.arange(s_new, dtype=jnp.int32)[None]
     return idx % cap if ring else idx
@@ -135,17 +208,25 @@ def free_slots(cache: Cache, counts) -> Cache:
     return dict(cache, pos=pos, cursor=cursor, ref=jnp.maximum(ref, 0))
 
 
-def trim_slots(cache: Cache, mask, keep) -> Cache:
+def trim_slots(cache: Cache, mask, keep, *, ring: bool = False) -> Cache:
     """Roll the rows selected by ``mask`` (B,) bool back to their first
     ``keep`` (B,) int32 committed tokens.
 
     Used when a retained context is reused by a request that shares only a
-    *proper* prefix: slots at physical index >= ``keep`` become
+    *proper* prefix: slots at logical index >= ``keep`` become
     unreachable (``pos = -1``) and the cursor drops to ``keep``, so the
     next committed write extends the shared prefix. Only valid on rows
     with no active readers (the scheduler trims retained rows only) and on
-    non-ring caches, where physical index == committed order.
+    non-ring caches, where slot index == committed order — on a ring the
+    slot holding committed token ``j`` depends on how often the row
+    wrapped, so "first ``keep`` tokens" is not an index range and a trim
+    would corrupt attendability. ``ring`` is the static flag the caller
+    built its cache with; passing ``ring=True`` raises.
     """
+    if ring:
+        raise ValueError(
+            "trim_slots on a ring cache: slot index != committed order, "
+            "trimming would corrupt attendability (non-ring caches only)")
     cap = cache["pos"].shape[1]
     idx = jnp.arange(cap, dtype=jnp.int32)[None]
     drop = mask[:, None] & (idx >= keep[:, None])
@@ -155,5 +236,29 @@ def trim_slots(cache: Cache, mask, keep) -> Cache:
     return dict(cache, pos=pos, cursor=cursor)
 
 
+def adopt_slots(cache: Cache, mask, length) -> Cache:
+    """Install an already-populated shared prefix on the rows selected by
+    ``mask`` (B,) bool: logical slots ``0..length-1`` become attendable at
+    positions ``0..length-1`` and the cursor moves to ``length`` (B,)
+    int32, *without writing any KV bytes*.
+
+    Paged-cache admission uses this after mapping radix-indexed pages into
+    a row's page table: the pages already hold the prefix's KV (committed
+    context positions are always ``0..n-1``), so adoption is pure int32
+    bookkeeping — the page-table gather makes the bytes reachable and
+    ``adopt_slots`` makes them attendable. Slots at and beyond ``length``
+    are reset to -1 (the row is assumed freshly reset or stolen).
+    Non-ring only, like ``trim_slots``.
+    """
+    cap = cache["pos"].shape[1]
+    idx = jnp.arange(cap, dtype=jnp.int32)[None]
+    take = mask[:, None] & (idx < length[:, None])
+    pos = jnp.where(take, idx, cache["pos"])
+    pos = jnp.where(mask[:, None] & (idx >= length[:, None]), -1, pos)
+    cursor = jnp.where(mask, length, cache["cursor"])
+    return dict(cache, pos=pos, cursor=cursor)
+
+
 __all__ = ["Cache", "init_lm_cache", "cache_shape", "slot_indices",
-           "retain_slots", "free_slots", "trim_slots"]
+           "retain_slots", "free_slots", "trim_slots", "adopt_slots",
+           "is_paged", "page_size_of", "physical_slots"]

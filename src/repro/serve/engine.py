@@ -50,7 +50,7 @@ from repro.kernels.decode_attn.ops import decode_attention
 from repro.models.layers import alibi_slopes, apply_rope, dense, rmsnorm
 from repro.models.moe import moe_ffn
 from repro.models.transformer import ModelConfig, forward
-from repro.serve.cache import Cache, slot_indices
+from repro.serve.cache import Cache, is_paged, physical_slots, slot_indices
 
 Params = Dict[str, Any]
 
@@ -137,6 +137,37 @@ def _decode_mask(pos_buf, positions, window: int, seg_q=None, seg_buf=None):
     return m
 
 
+def _cache_write(buf, slots, new, *, bidx, write_idx):
+    """Scatter freshly produced KV into the cache.
+
+    Contiguous layout (``write_idx=None``): ``buf (B, cap, ...)`` is
+    indexed per row at logical ``slots``. Paged layout: ``buf`` is the
+    global ``(n_total, ...)`` pool and ``write_idx (B, s)`` carries the
+    physical slot of each token (-1 where the logical slot's page is
+    unmapped or past capacity — those writes drop). Either way writes only
+    land on the row's private (never shared) slots; see docs/serving.md.
+    """
+    if write_idx is None:
+        return buf.at[bidx, slots].set(new.astype(buf.dtype), mode="drop")
+    b, s = write_idx.shape
+    flat = new.astype(buf.dtype).reshape((b * s,) + new.shape[2:])
+    # -1 sentinels must map PAST the pool, not onto its last slot: jax
+    # wraps negative indices numpy-style before mode="drop" applies, so a
+    # raw -1 would silently clobber the highest physical slot (a live page
+    # once the pool fills).
+    idx = write_idx.reshape(-1)
+    idx = jnp.where(idx >= 0, idx, buf.shape[0])
+    return buf.at[idx].set(flat, mode="drop")
+
+
+def _cache_view(buf, read_idx):
+    """Row-major read view of the cache: identity for the contiguous
+    layout, page-index gather for the paged layout (``read_idx (B, cap)``
+    physical slots, already clamped — unmapped entries gather arbitrary
+    pool bytes that ``pos = -1`` masking keeps unattendable)."""
+    return buf if read_idx is None else buf[read_idx]
+
+
 def _decode_attend(scores_rope, scores_nope, alibi, d, mask, is_sum_q, v_agg):
     """Shared score->prob->value logic. scores_* are (B, H, s, cap) fp32."""
     if scores_nope is not None:
@@ -153,7 +184,8 @@ def _decode_attend(scores_rope, scores_nope, alibi, d, mask, is_sum_q, v_agg):
 def _gqa_decode_layer(lp: Params, h, kc, vc, *, cfg: ModelConfig, slots,
                       pos_buf, positions, is_sum, window, kind,
                       seg_q=None, seg_buf=None, impl="dense",
-                      block_size=64, interpret=None):
+                      block_size=64, interpret=None,
+                      write_idx=None, read_idx=None):
     b, s, _ = h.shape
     hq, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     n_rep = hq // hk
@@ -165,23 +197,26 @@ def _gqa_decode_layer(lp: Params, h, kc, vc, *, cfg: ModelConfig, slots,
     bidx = jnp.arange(b)[:, None]
     # mode="drop": padded-to-bucket chunks may point past capacity; those
     # writes must vanish, not clamp onto the last slot (see decode docstring)
-    kc = kc.at[bidx, slots].set(k_new.astype(kc.dtype), mode="drop")
-    vc = vc.at[bidx, slots].set(v_new.astype(vc.dtype), mode="drop")
+    kc = _cache_write(kc, slots, k_new, bidx=bidx, write_idx=write_idx)
+    vc = _cache_write(vc, slots, v_new, bidx=bidx, write_idx=write_idx)
+    k_raw = _cache_view(kc, read_idx)
+    v_raw = _cache_view(vc, read_idx)
 
     q_rope = apply_rope(q, positions, cfg.rope_theta)
-    k_rope = _rope_read(kc, pos_buf, cfg.rope_theta)
+    k_rope = _rope_read(k_raw, pos_buf, cfg.rope_theta)
     scale = hd ** -0.5
 
     if impl == "pallas":
-        # fused burst attention into the cache: the kernel reads the cache
-        # layout directly (GQA via index maps), applies every mask term via
+        # fused burst attention into the cache: the kernel reads the
+        # row-major cache view directly (contiguous storage, or the paged
+        # page-index gather) via index maps, applies every mask term via
         # index arithmetic and keeps the softmax online — no (B,H,s,cap)
         # score/prob tensors, empty cache blocks skipped
         nope = cfg.dti_sum_alibi
         out = decode_attention(
-            q_rope, k_rope, vc, positions, pos_buf, window=window,
+            q_rope, k_rope, v_raw, positions, pos_buf, window=window,
             is_sum_q=is_sum if nope else None,
-            q_nope=q if nope else None, k_nope=kc if nope else None,
+            q_nope=q if nope else None, k_nope=k_raw if nope else None,
             alibi=alibi_slopes(hq) if nope else None,
             seg_q=seg_q, seg_k=seg_buf, scale=scale,
             block_size=block_size, interpret=interpret).astype(h.dtype)
@@ -200,7 +235,7 @@ def _gqa_decode_layer(lp: Params, h, kc, vc, *, cfg: ModelConfig, slots,
                          preferred_element_type=jnp.float32) * scale
     sc_nope = None
     if cfg.dti_sum_alibi:
-        sc_nope = jnp.einsum("bshd,bkhd->bhsk", q, rep(kc),
+        sc_nope = jnp.einsum("bshd,bkhd->bhsk", q, rep(k_raw),
                              preferred_element_type=jnp.float32) * scale
 
     d = (positions[:, None, :, None] - pos_buf[:, None, None, :]
@@ -208,7 +243,7 @@ def _gqa_decode_layer(lp: Params, h, kc, vc, *, cfg: ModelConfig, slots,
     mask = _decode_mask(pos_buf, positions, window, seg_q, seg_buf)
     out = _decode_attend(sc_rope, sc_nope, alibi_slopes(hq), d, mask, is_sum,
                          lambda p: jnp.einsum("bhsk,bkhd->bshd",
-                                              p.astype(h.dtype), rep(vc)))
+                                              p.astype(h.dtype), rep(v_raw)))
     h = h + dense(lp["attn"]["o"], out.reshape(b, s, hq * hd))
     h, aux = _ffn(lp, h, cfg, kind)
     return h, kc, vc, aux
@@ -217,7 +252,8 @@ def _gqa_decode_layer(lp: Params, h, kc, vc, *, cfg: ModelConfig, slots,
 def _mla_decode_layer(lp: Params, h, ckv_c, kpe_c, *, cfg: ModelConfig,
                       slots, pos_buf, positions, is_sum, window, kind,
                       seg_q=None, seg_buf=None, impl="dense",
-                      block_size=64, interpret=None):
+                      block_size=64, interpret=None,
+                      write_idx=None, read_idx=None):
     """Absorbed-MLA decode: scores and values against the latent cache."""
     b, s, _ = h.shape
     hq = cfg.n_heads
@@ -238,16 +274,18 @@ def _mla_decode_layer(lp: Params, h, ckv_c, kpe_c, *, cfg: ModelConfig,
     kpe_new = dense(ap["k_rope"], x)                                # (B,s,dr)
 
     bidx = jnp.arange(b)[:, None]
-    ckv_c = ckv_c.at[bidx, slots].set(c_new.astype(ckv_c.dtype), mode="drop")
-    kpe_c = kpe_c.at[bidx, slots].set(kpe_new.astype(kpe_c.dtype),
-                                      mode="drop")
+    ckv_c = _cache_write(ckv_c, slots, c_new, bidx=bidx, write_idx=write_idx)
+    kpe_c = _cache_write(kpe_c, slots, kpe_new, bidx=bidx,
+                         write_idx=write_idx)
+    ckv_v = _cache_view(ckv_c, read_idx)
+    kpe_v = _cache_view(kpe_c, read_idx)
 
     # absorb W_UK into the query, W_UV into the output
     w_up = ap["kv_up"]["w"].reshape(cfg.kv_lora_rank, hq, dn + dv)
     w_uk, w_uv = w_up[..., :dn], w_up[..., dn:]
     q_abs = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)              # (B,s,H,r)
 
-    kpe_rope = _rope_read(kpe_c[:, :, None, :], pos_buf,
+    kpe_rope = _rope_read(kpe_v[:, :, None, :], pos_buf,
                           cfg.rope_theta)[:, :, 0, :]               # (B,cap,dr)
     scale = (dn + dr) ** -0.5
 
@@ -257,13 +295,13 @@ def _mla_decode_layer(lp: Params, h, ckv_c, kpe_c, *, cfg: ModelConfig,
         # q_eff . k_eff == q_abs . ckv + q_pe_rope . kpe_rope — and keep
         # values in the latent (Dv = r_kv != Dqk); W_UV folds after.
         q_eff = jnp.concatenate([q_abs, q_pe_rope], axis=-1)
-        k_eff = jnp.concatenate([ckv_c, kpe_rope], axis=-1)[:, :, None, :]
+        k_eff = jnp.concatenate([ckv_v, kpe_rope], axis=-1)[:, :, None, :]
         nope = cfg.dti_sum_alibi
         qn_eff = (jnp.concatenate([q_abs, q_pe], axis=-1) if nope else None)
-        kn_eff = (jnp.concatenate([ckv_c, kpe_c], axis=-1)[:, :, None, :]
+        kn_eff = (jnp.concatenate([ckv_v, kpe_v], axis=-1)[:, :, None, :]
                   if nope else None)
         o_lat = decode_attention(
-            q_eff, k_eff, ckv_c[:, :, None, :], positions, pos_buf,
+            q_eff, k_eff, ckv_v[:, :, None, :], positions, pos_buf,
             window=window, is_sum_q=is_sum if nope else None,
             q_nope=qn_eff, k_nope=kn_eff,
             alibi=alibi_slopes(hq) if nope else None,
@@ -274,15 +312,15 @@ def _mla_decode_layer(lp: Params, h, ckv_c, kpe_c, *, cfg: ModelConfig,
         h, aux = _ffn(lp, h, cfg, kind)
         return h, ckv_c, kpe_c, aux
 
-    sc_rope = (jnp.einsum("bshr,bkr->bhsk", q_abs, ckv_c,
+    sc_rope = (jnp.einsum("bshr,bkr->bhsk", q_abs, ckv_v,
                           preferred_element_type=jnp.float32)
                + jnp.einsum("bshd,bkd->bhsk", q_pe_rope, kpe_rope,
                             preferred_element_type=jnp.float32)) * scale
     sc_nope = None
     if cfg.dti_sum_alibi:
-        sc_nope = (jnp.einsum("bshr,bkr->bhsk", q_abs, ckv_c,
+        sc_nope = (jnp.einsum("bshr,bkr->bhsk", q_abs, ckv_v,
                               preferred_element_type=jnp.float32)
-                   + jnp.einsum("bshd,bkd->bhsk", q_pe, kpe_c,
+                   + jnp.einsum("bshd,bkd->bhsk", q_pe, kpe_v,
                                 preferred_element_type=jnp.float32)) * scale
 
     d = (positions[:, None, :, None] - pos_buf[:, None, None, :]
@@ -290,7 +328,7 @@ def _mla_decode_layer(lp: Params, h, ckv_c, kpe_c, *, cfg: ModelConfig,
     mask = _decode_mask(pos_buf, positions, window, seg_q, seg_buf)
 
     def v_agg(p):
-        o_lat = jnp.einsum("bhsk,bkr->bshr", p.astype(h.dtype), ckv_c)
+        o_lat = jnp.einsum("bhsk,bkr->bshr", p.astype(h.dtype), ckv_v)
         return jnp.einsum("bshr,rhd->bshd", o_lat, w_uv)
 
     out = _decode_attend(sc_rope, sc_nope, alibi_slopes(hq), d, mask, is_sum,
@@ -356,6 +394,15 @@ def make_decode_fn(cfg: ModelConfig, *, window: int, ring: bool,
       are shared by construction; burst tokens attend context + their own
       segment only, so one burst step scores a whole candidate slate — the
       decode-side analog of the training paradigm's k isolated targets.
+
+    Paged caches (``init_lm_cache(page_size=...)``) are detected from the
+    cache structure: reads and writes go through the page-index gather
+    maps of ``repro.serve.cache.physical_slots``, everything else —
+    including the Pallas kernel, which consumes the gathered row-major
+    view — is unchanged. Since a gathered view holds the same values at
+    the same logical slots as contiguous storage and unmapped slots carry
+    ``pos = -1``, paged and contiguous decode are byte-identical
+    (tests/test_paged_cache.py). Paged requires ``ring=False``.
     """
     mla = cfg.attn_type == "mla"
     keys = ("ckv", "kpe") if mla else ("k", "v")
@@ -373,6 +420,20 @@ def make_decode_fn(cfg: ModelConfig, *, window: int, ring: bool,
         b, s = tokens.shape
         slots = slot_indices(cache, s, ring=ring)
         bidx = jnp.arange(b)[:, None]
+        write_idx = read_idx = None
+        if is_paged(cache):
+            # page-index gather maps (docs/serving.md): flat (B, cap) is
+            # logical->physical; reads gather a row-major view through it,
+            # writes scatter at each token's physical slot. Unmapped pages
+            # (flat == -1) drop writes and gather arbitrary pool bytes that
+            # pos = -1 keeps unattendable.
+            assert not ring, "paged caches are non-ring"
+            cap = cache["pos"].shape[1]
+            flat = physical_slots(cache)
+            write_idx = jnp.take_along_axis(
+                flat, jnp.clip(slots, 0, cap - 1), axis=1)
+            write_idx = jnp.where(slots < cap, write_idx, -1)
+            read_idx = jnp.maximum(flat, 0)
         pos_write = (positions if valid is None
                      else jnp.where(valid, positions, -1))
         # mode="drop": a chunk right-padded to its bucket may index past
@@ -420,7 +481,8 @@ def make_decode_fn(cfg: ModelConfig, *, window: int, ring: bool,
                     lp, hc, ca, cb, cfg=cfg, slots=slots, pos_buf=pos_buf,
                     positions=positions, is_sum=is_sum, window=window,
                     kind=kind, seg_q=seg, seg_buf=seg_buf, impl=attn_impl,
-                    block_size=block_size, interpret=interpret)
+                    block_size=block_size, interpret=interpret,
+                    write_idx=write_idx, read_idx=read_idx)
                 ca_full = jax.lax.dynamic_update_index_in_dim(
                     ca_full, ca.astype(ca_full.dtype), li, 0)
                 cb_full = jax.lax.dynamic_update_index_in_dim(

@@ -1,0 +1,85 @@
+"""Host-side page pool for the paged KV cache.
+
+The paged cache (``repro.serve.cache`` with ``page_size`` set) stores KV on
+a single global slot axis of ``n_pages * page_size`` physical slots; rows
+address it through a per-row ``page_table (B, max_pages) int32`` of pool
+page ids (-1 = unmapped). ``PagePool`` owns the allocation state for those
+pages: a free list and a per-page reference count. It is deliberately
+host-only — allocation decisions never need a device sync, and the device
+never sees refcounts, only the page tables the scheduler publishes.
+
+Refcount invariant (checked by tests/test_paged_cache.py):
+
+    ref[p] == (# row page-table entries mapping p)
+              + (1 if the radix prefix index holds p)
+
+A page with ``ref > 1`` is *shared*: it is fully committed in every view
+that maps it and is never written again (writers only touch private
+``ref == 1`` pages — partial boundary pages are never published, so a
+shared page can only ever be read). A page returns to the free list when
+its last reference drops.
+
+Eviction is not the pool's job: when ``alloc`` comes up short the caller
+(the scheduler) reclaims pages from the radix index via
+``RadixTree.evict_pages`` — least-recently-used pages held only by the
+index — releases them here, and retries. ``evictions`` counts pages
+reclaimed that way for telemetry/benchmarks.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+
+class PagePool:
+    """Fixed-size page allocator: free list + per-page refcounts."""
+
+    def __init__(self, n_pages: int, page_size: int):
+        assert n_pages > 0 and page_size > 0
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        self.ref = np.zeros(self.n_pages, np.int32)
+        # stack: pop() hands out low page ids first
+        self._free: List[int] = list(range(self.n_pages - 1, -1, -1))
+        self.evictions = 0          # pages reclaimed from the prefix index
+        self.alloc_total = 0        # pages ever handed out
+
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def pages_in_use(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Hand out ``n`` pages with ``ref = 1`` each, or ``None`` (and no
+        state change) if the free list is short — the caller evicts from
+        the prefix index and retries."""
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        for p in out:
+            assert self.ref[p] == 0, f"page {p} on free list with ref set"
+            self.ref[p] = 1
+        self.alloc_total += n
+        return out
+
+    def incref(self, pages) -> None:
+        for p in pages:
+            assert self.ref[p] > 0, f"incref on unallocated page {p}"
+            self.ref[p] += 1
+
+    def decref(self, pages) -> None:
+        """Drop one reference per page; pages reaching zero return to the
+        free list."""
+        for p in pages:
+            assert self.ref[p] > 0, f"decref on unallocated page {p}"
+            self.ref[p] -= 1
+            if self.ref[p] == 0:
+                self._free.append(int(p))
+
+    def note_evictions(self, n: int) -> None:
+        self.evictions += int(n)
+
+
+__all__ = ["PagePool"]

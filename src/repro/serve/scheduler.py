@@ -83,11 +83,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dti import SpecialTokens
-from repro.data.requests import ContextTrie
+from repro.data.requests import RadixTree
 from repro.models.transformer import ModelConfig
-from repro.serve.cache import (free_slots, init_lm_cache, retain_slots,
-                               trim_slots)
+from repro.serve.cache import (adopt_slots, free_slots, init_lm_cache,
+                               retain_slots, trim_slots)
 from repro.serve.engine import make_decode_fn
+from repro.serve.pages import PagePool
 
 
 @dataclasses.dataclass
@@ -250,7 +251,9 @@ class ServeScheduler:
                  prefill_budget: Optional[int] = None,
                  monolithic_prefill: bool = False,
                  overlap: bool = True,
-                 watchdog_steps: int = 256):
+                 watchdog_steps: int = 256,
+                 paged: bool = True, page_size: int = 16,
+                 n_pages: Optional[int] = None):
         if window is None:
             window = cfg.window          # match make_prefill_fn's default
         self.params = params
@@ -269,6 +272,26 @@ class ServeScheduler:
         self.monolithic_prefill = bool(monolithic_prefill)
         self.overlap = bool(overlap)
         self.watchdog_steps = int(watchdog_steps)
+        self.paged = bool(paged)
+        if self.paged:
+            # each row addresses the global page pool through its page
+            # table; the pool defaults to the same total slot count as the
+            # contiguous layout, so pages freed by short contexts fund
+            # radix-index retention instead of sitting idle in long rows
+            cap_eff = -(-capacity // page_size) * page_size
+            self.page_size = int(page_size)
+            max_pages = cap_eff // page_size
+            if n_pages is None:
+                n_pages = n_slots * max_pages
+            self._pool = PagePool(n_pages, page_size)
+            # host mirror of the device page tables (authoritative copy;
+            # synced to the cache dict whenever dirty)
+            self._tables = np.full((n_slots, max_pages), -1, np.int32)
+            self._tables_dirty = False
+        else:
+            cap_eff = capacity
+            self.page_size = None
+            self._pool = None
         # the cache is donated to every jitted op that rewrites it: KV
         # tensors alias straight through (bookkeeping ops touch int32 only)
         # instead of being copied per call — the scheduler always rebinds
@@ -280,11 +303,22 @@ class ServeScheduler:
             donate_argnums=(1,))
         self._free = jax.jit(free_slots, donate_argnums=(0,))
         self._retain = jax.jit(retain_slots, donate_argnums=(0,))
-        self._trim = jax.jit(trim_slots, donate_argnums=(0,))
-        self.cache = init_lm_cache(cfg, n_slots, capacity, dtype=cache_dtype)
+        # the scheduler's caches are never rings; threading the flag makes
+        # trim_slots' non-ring-only contract enforced, not just documented
+        self._trim = jax.jit(lambda c, m, k: trim_slots(c, m, k, ring=False),
+                             donate_argnums=(0,))
+        self._adopt = jax.jit(adopt_slots, donate_argnums=(0,))
+        self.cache = init_lm_cache(
+            cfg, n_slots, cap_eff, dtype=cache_dtype,
+            page_size=self.page_size,
+            n_pages=n_pages if self.paged else None)
         self._queue: deque = deque()
         self._rows: List[_Row] = [_Row() for _ in range(n_slots)]
-        self._trie = ContextTrie()
+        self._trie = RadixTree(page_size=self.page_size or 0)
+        # host shadow of the device per-row refcounts: lets the row-op
+        # batcher detect double-frees (`_flush_row_ops`) and the paged path
+        # unmap pages exactly when a row resets, without a device sync
+        self._row_ref = np.zeros((n_slots,), np.int32)
         self._pending = self._fresh_pending()
         self._results: Dict[int, RequestResult] = {}
         self._next_rid = 0
@@ -306,6 +340,9 @@ class ServeScheduler:
         state, retained blocks and results are untouched."""
         self.n_steps = 0
         self.shared_admissions = 0
+        self.cross_row_hits = 0          # admissions served from the radix
+        self.cross_row_tokens = 0        # page index (pages another row or
+                                         # no row currently holds)
         self.watchdog_fired = 0
         self.watchdog_stuck_rids: List[int] = []
         self._watchdog_rows: set = set()
@@ -316,9 +353,20 @@ class ServeScheduler:
         self._budget_used = 0
         self._budget_avail = 0
         self._starved_steps = 0
+        self._prefill_steps = 0          # steps that dispatched >=1 commit
+        self._ctx_tokens_done = 0        # finished requests' context tokens
+        self._shared_tokens_done = 0     # ... of which served from cache
+        if self.paged:
+            self._pool.evictions = 0
         for r in self._rows:
             r.last_used = 0
             r.last_progress = 0
+
+    def reset_telemetry(self) -> None:
+        """Documented alias of ``reset_stats`` — clears every counter
+        ``telemetry()`` reports, including the watchdog state
+        (``_watchdog_rows`` / ``watchdog_stuck_rids``)."""
+        self.reset_stats()
 
     def telemetry(self) -> Dict[str, Any]:
         """Scheduler-health counters since construction / ``reset_stats``:
@@ -337,9 +385,12 @@ class ServeScheduler:
         * ``watchdog_fired`` / ``watchdog_rows`` / ``watchdog_stuck_rids``
           — stalled-row detections (see ``watchdog_steps``).
         """
+        # guard the burst-only / zero-prefill case: with no prefill steps
+        # dispatched there is no budget demand to divide by — report None,
+        # never a ZeroDivisionError
         util = (self._budget_used / self._budget_avail
                 if self._budget_avail else None)
-        return {
+        out = {
             "steps": int(self.n_steps),
             "overlap": bool(self.overlap),
             "bucket_steps": {int(b): int(c)
@@ -350,12 +401,28 @@ class ServeScheduler:
             "prefill_budget": (None if self.monolithic_prefill
                                else int(self.prefill_budget)),
             "prefill_tokens": int(self._budget_used),
+            "prefill_steps": int(self._prefill_steps),
             "budget_utilization": (None if self.monolithic_prefill else util),
             "prefill_starved_steps": int(self._starved_steps),
             "watchdog_fired": int(self.watchdog_fired),
             "watchdog_rows": sorted(int(i) for i in self._watchdog_rows),
             "watchdog_stuck_rids": list(self.watchdog_stuck_rids),
+            "paged": bool(self.paged),
+            "cross_row_hits": int(self.cross_row_hits),
+            "cross_row_tokens": int(self.cross_row_tokens),
+            "prefix_hit_rate": (self._shared_tokens_done
+                                / self._ctx_tokens_done
+                                if self._ctx_tokens_done else 0.0),
         }
+        if self.paged:
+            out.update({
+                "page_size": int(self.page_size),
+                "pages_in_use": int(self._pool.pages_in_use()),
+                "pages_free": int(self._pool.free_count()),
+                "page_evictions": int(self._pool.evictions),
+                "radix_pages": int(self._trie.held_pages()),
+            })
+        return out
 
     def warmup(self) -> None:
         """Pre-compile the decode step for every bucket shape with an
@@ -376,6 +443,7 @@ class ServeScheduler:
         zc = jnp.asarray(np.zeros((self.n_slots,), np.int32))
         self.cache = self._free(self.cache, zc)
         self.cache = self._trim(self.cache, none, zc)
+        self.cache = self._adopt(self.cache, none, zc)
         self.cache = self._retain(self.cache, zc)
         jax.block_until_ready(self.cache["pos"])
 
@@ -422,6 +490,12 @@ class ServeScheduler:
         self.params = params
         if version is not None:
             self.params_version = version
+        if self.paged:
+            # the radix page index holds pre-swap KV: flush it before any
+            # restart re-allocates, so freed pages fund the recommits
+            dropped = self._trie.drop_all_pages()
+            if dropped:
+                self._pool.decref(dropped)
         for i, r in enumerate(self._rows):
             committer = self._committer(r) if r.pending_commit > 0 else None
             if committer is not None:
@@ -434,6 +508,16 @@ class ServeScheduler:
                 committer.prefill_tokens = n
                 committer.shared_prefix_tokens = 0
                 self._mark("trim", i, keep=0)
+                if self.paged:
+                    # radix-adopted pages may be shared with other rows —
+                    # a full recommit must write only private pages
+                    self._unmap_row(i)
+                    if not self._ensure_pages(i, min(self.capacity,
+                                                     n + self.buckets[-1]),
+                                              exclude={i}):
+                        raise RuntimeError(
+                            f"page pool exhausted re-committing row {i} "
+                            f"after a weight hot-swap")
                 continue
             if not self.share_prefix or not r.committed:
                 continue
@@ -443,6 +527,8 @@ class ServeScheduler:
                 self._trie.remove(r.committed, i)
                 r.committed, r.retained = [], False
                 self._mark("free", i)
+                if self.paged:
+                    self._unmap_row(i)
 
     # -- request intake ------------------------------------------------------
 
@@ -464,14 +550,53 @@ class ServeScheduler:
         j_long = max(range(len(candidates)),
                      key=lambda j: len(candidates[j]))
         longest = len(candidates[j_long]) + 1
-        assert longest <= self.buckets[-1], (
-            f"request {rid}: candidate {j_long} burst {longest} tokens "
-            f"> largest bucket {self.buckets[-1]}")
-        assert len(ctx) + longest <= self.capacity, (
-            f"request {rid}: context {len(ctx)} + candidate {j_long} "
-            f"burst {longest} > capacity {self.capacity}")
+        if longest > self.buckets[-1]:
+            raise ValueError(
+                f"request {rid}: candidate {j_long} burst {longest} tokens "
+                f"> largest bucket {self.buckets[-1]}")
+        # explicit capacity-overflow rejection: non-ring `slot_indices`
+        # never wraps or clamps, so a commit running past capacity would
+        # silently scatter-drop KV (mode="drop") and score garbage — the
+        # overflow must be refused here, with the offending lengths named,
+        # before any row state is touched
+        if len(ctx) + longest > self.capacity:
+            raise ValueError(
+                f"request {rid}: context {len(ctx)} + candidate {j_long} "
+                f"burst {longest} tokens overflow capacity {self.capacity} "
+                f"(commits past capacity would be silently dropped)")
         self._queue.append((rid, ctx, [list(c) for c in candidates],
                             time.perf_counter()))
+        return rid
+
+    def prewarm(self, context: Sequence[Sequence[int]]) -> Optional[int]:
+        """Enqueue a candidate-less request that commits ``context`` into
+        the cache (and, on a paged cache, publishes its full pages into
+        the radix index) without scoring anything — so a user's *next*
+        real request admits against an already-resident prefix. The
+        stream pipeline calls this for hot users on hot-swap-free ticks
+        (`repro.stream.prewarm`).
+
+        Prewarms ride the normal admission ladder and prefill budget, so
+        they never preempt scoring traffic's jit shapes; the context is
+        clamped to leave one largest-bucket of burst headroom for the
+        real request that follows. Returns the rid (its RequestResult
+        has ``scores == []``), or None when sharing is off, the usable
+        context is shorter than ``min_shared_prefix``, or the prefix is
+        already fully resident (nothing to warm)."""
+        if not self.share_prefix:
+            return None
+        ctx = [self.sp.bos]
+        for it in context:
+            ctx.extend(it)
+        ctx = ctx[:max(0, self.capacity - self.buckets[-1])]
+        if len(ctx) < self.min_shared_prefix:
+            return None
+        end_d, _, _, _ = self._trie.match(ctx)
+        if end_d >= len(ctx):
+            return None
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append((rid, ctx, [], time.perf_counter()))
         return rid
 
     # -- unit construction ---------------------------------------------------
@@ -535,40 +660,164 @@ class ServeScheduler:
         flush()
         return units, total
 
+    # -- paged-cache page management (host-side, no device syncs) ------------
+
+    def _unmap_row(self, row: int, from_page: int = 0) -> None:
+        """Drop the row's page-table references from ``from_page`` on.
+        Pages whose last reference this was return to the pool; pages the
+        radix index still holds stay resident (and matchable) rowlessly."""
+        tbl = self._tables[row]
+        pids = tbl[from_page:]
+        pids = pids[pids >= 0]
+        if len(pids):
+            self._pool.decref([int(p) for p in pids])
+            tbl[from_page:] = -1
+            self._tables_dirty = True
+
+    def _alloc_pages(self, n: int, exclude=()) -> Optional[List[int]]:
+        """Allocate ``n`` private pages, reclaiming under pressure: first
+        LRU pages held only by the radix index, then whole LRU retained
+        rows (their trie entries drop, like a steal). ``exclude`` protects
+        rows the current admission is about to use. None when the pool is
+        truly exhausted (every page pinned by an active or excluded row)."""
+        if n == 0:
+            return []
+        while True:
+            pids = self._pool.alloc(n)
+            if pids is not None:
+                return pids
+            short = n - self._pool.free_count()
+            ev = self._trie.evict_pages(short, self._pool.ref)
+            if ev:
+                self._pool.note_evictions(len(ev))
+                self._pool.decref(ev)
+                continue
+            victims = [i for i, r in enumerate(self._rows)
+                       if i not in exclude and not r.active and r.retained
+                       and r.pending_commit == 0]
+            if not victims:
+                return None
+            row = min(victims, key=lambda i: self._rows[i].last_used)
+            r = self._rows[row]
+            self._trie.remove(r.committed, row)
+            r.committed, r.retained = [], False
+            self._mark("free", row)
+            self._unmap_row(row)
+
+    def _mapped_pages(self, row: int) -> int:
+        """Mapped page-table prefix length (mappings are always a
+        contiguous prefix: adopt/extend grow it, trim/free shrink it)."""
+        return int((self._tables[row] >= 0).sum())
+
+    def _ensure_pages(self, row: int, upto_tokens: int, exclude=()) -> bool:
+        """Grow ``row``'s mapped prefix to cover ``upto_tokens`` logical
+        slots (committed context plus the burst-scratch extent). New pages
+        are private (ref 1, owned by the row)."""
+        need = -(-min(upto_tokens, self.capacity) // self.page_size)
+        have = self._mapped_pages(row)
+        if need <= have:
+            return True
+        pids = self._alloc_pages(need - have, exclude=exclude)
+        if pids is None:
+            return False
+        self._tables[row, have:need] = pids
+        self._tables_dirty = True
+        return True
+
+    def _publish_pages(self, row: int) -> None:
+        """Index the row's full committed pages in the radix tree (the
+        index takes one pool reference per newly adopted page), so the
+        prefix stays reusable by *any* row even after this one is stolen."""
+        r = self._rows[row]
+        full = len(r.committed) // self.page_size
+        if full == 0:
+            return
+        pids = [int(p) for p in self._tables[row, :full]]
+        assert all(p >= 0 for p in pids)
+        new = self._trie.attach_pages(r.committed, pids)
+        if new:
+            self._pool.incref(new)
+
+    def _max_burst_extent(self, candidates: List[List[int]],
+                          suffix_len: int, burst_cap: int) -> int:
+        """Largest slot extent any single burst unit will write past the
+        committed block — mirrors ``_burst_units``'s greedy packing."""
+        cur, out = suffix_len, 0
+        for c in candidates:
+            g = len(c) + 1
+            if cur > suffix_len and cur + g > burst_cap:
+                cur = suffix_len
+            cur += g
+            out = max(out, cur)
+        return out
+
     # -- admission -----------------------------------------------------------
 
     def _mark(self, which: str, row: int, keep: int = 0) -> None:
-        """Queue a refcount/trim update for ``row``; applied in one batched
-        jitted call per phase (`_flush_row_ops`) instead of per event —
-        per-event dispatch would dominate the step at small model sizes.
-        Retain/free marks are *counts*, not flags: several requests can
-        take (or drop) references on the same row within one wave."""
+        """Queue a refcount/trim/adopt update for ``row``; applied in one
+        batched jitted call per phase (`_flush_row_ops`) instead of per
+        event — per-event dispatch would dominate the step at small model
+        sizes. Retain/free marks are *counts*, not flags: several requests
+        can take (or drop) references on the same row within one wave."""
         if which == "trim":
             self._pending["trim"][row] = True
             self._pending["trim_keep"][row] = keep
+        elif which == "adopt":
+            self._pending["adopt"][row] = True
+            self._pending["adopt_len"][row] = keep
         else:
             self._pending[which][row] += 1
 
     def _flush_row_ops(self) -> None:
         """Apply queued row ops in dependency order: free (steal resets)
-        -> trim (roll back retained blocks) -> retain (new references).
-        The three touch disjoint rows within one phase except steal, which
-        queues free+retain on the same row — exactly the order applied."""
+        -> trim (roll back retained blocks) -> adopt (install radix-mapped
+        prefixes) -> retain (new references). The phases touch disjoint
+        rows within one flush except steal, which queues free+retain (and
+        possibly adopt) on the same row — exactly the order applied.
+
+        Before applying, the free counts are audited against the host
+        shadow refcounts: freeing more references than a row holds is a
+        scheduler accounting bug that the device op would silently
+        *saturate* (resetting ``pos``/``cursor`` under a still-active
+        sharer mid-burst), so it fails loudly here with the row and its
+        active rids named instead.
+        """
         p = self._pending
+        over = p["free"] > self._row_ref
+        if over.any():
+            parts = []
+            for row in np.flatnonzero(over):
+                rids = sorted(s.rid for s in self._rows[row].active)
+                parts.append(
+                    f"row {int(row)}: freeing {int(p['free'][row])} ref(s) "
+                    f"but only {int(self._row_ref[row])} held "
+                    f"(active rids {rids})")
+            raise RuntimeError("double-free in row-op batch — " +
+                               "; ".join(parts))
+        self._row_ref += p["retain"] - p["free"]
         if p["free"].any():
             self.cache = self._free(self.cache, jnp.asarray(p["free"]))
         if p["trim"].any():
             self.cache = self._trim(self.cache, jnp.asarray(p["trim"]),
                                     jnp.asarray(p["trim_keep"]))
+        if p["adopt"].any():
+            self.cache = self._adopt(self.cache, jnp.asarray(p["adopt"]),
+                                     jnp.asarray(p["adopt_len"]))
         if p["retain"].any():
             self.cache = self._retain(self.cache, jnp.asarray(p["retain"]))
+        if self.paged and self._tables_dirty:
+            self.cache = dict(self.cache,
+                              page_table=jnp.asarray(self._tables))
+            self._tables_dirty = False
         self._pending = self._fresh_pending()
 
     def _fresh_pending(self) -> Dict[str, np.ndarray]:
         return {"free": np.zeros((self.n_slots,), np.int32),
                 "trim": np.zeros((self.n_slots,), bool),
                 "retain": np.zeros((self.n_slots,), np.int32),
-                "trim_keep": np.zeros((self.n_slots,), np.int32)}
+                "trim_keep": np.zeros((self.n_slots,), np.int32),
+                "adopt": np.zeros((self.n_slots,), bool),
+                "adopt_len": np.zeros((self.n_slots,), np.int32)}
 
     def _admit(self, row: int, rid: int, ctx: List[int],
                candidates: List[List[int]], t0: float, *,
@@ -616,6 +865,10 @@ class ServeScheduler:
         r.active.append(slot)
         if shared_depth > 0:
             self.shared_admissions += 1
+        if prefill is None and not slot.units:
+            # a prewarm whose context is already fully resident: nothing
+            # to dispatch, the request completes at admission
+            self._finish(slot, time.perf_counter())
 
     def _try_place(self, rid: int, ctx: List[int],
                    candidates: List[List[int]], t0: float) -> bool:
@@ -638,15 +891,35 @@ class ServeScheduler:
            the commits by ``_build_wave``.
         3. **trim a retained block** — an inactive row sharing only a
            proper prefix: roll the block back to the shared prefix
-           (`trim_slots`), then commit the rest, as in 1.
-        4. **fresh row** — a never-used/reset row, else steal the
+           (`trim_slots`), then commit the rest, as in 1. Paged caches
+           trim at a page boundary when the boundary page is shared
+           (writing the recommit into it would corrupt its other
+           readers); a private boundary page trims at the exact depth.
+        4. **fresh row / steal** — a never-used/reset row, else steal the
            least-recently-used retained row (`free_slots` drops the
-           retention reference, resetting it).
+           retention reference, resetting it). On a paged cache this rung
+           first consults the radix **page index**: a prefix another row
+           committed — even one whose row has since been stolen — is
+           mapped straight into the new row's page table (`adopt_slots`
+           installs the bookkeeping; zero KV recompute, zero KV copy) and
+           only the tail is committed. These are the *cross-row* hits a
+           per-slot contiguous cache cannot serve.
+
+        On a paged cache every rung first maps enough pages to cover the
+        committed block plus the burst-scratch extent; a rung whose pages
+        cannot be allocated (pool exhausted even after evicting
+        index-only pages and stealing retained rows) is skipped.
 
         Returns False when nothing can host the request (all rows busy).
         """
         n = len(ctx)
-        max_group = max(len(c) + 1 for c in candidates)
+        max_group = max((len(c) + 1 for c in candidates), default=0)
+
+        def extent(committed_len: int, suffix_len: int) -> int:
+            cap = min(self.buckets[-1], self.capacity - committed_len)
+            return committed_len + self._max_burst_extent(
+                candidates, suffix_len, cap)
+
         if self.share_prefix:
             end_d, end_rows, thr_d, thr_rows = self._trie.match(ctx)
             ok = lambda i: (self._rows[i].pending_commit == 0
@@ -663,21 +936,25 @@ class ServeScheduler:
                         if not self._rows[i].stale and self._rows[i].active]
                 if idle:
                     row = idle[0]
-                    self._rows[row].retained = False   # hold transfers
-                    self._admit(row, rid, ctx, candidates, t0,
-                                shared_depth=end_d, commit_from=end_d,
-                                suffix_in_burst=False)
-                    return True
+                    if not self.paged or self._ensure_pages(
+                            row, extent(n, 0), exclude={row}):
+                        self._rows[row].retained = False  # hold transfers
+                        self._admit(row, rid, ctx, candidates, t0,
+                                    shared_depth=end_d, commit_from=end_d,
+                                    suffix_in_burst=False)
+                        return True
                 # the suffix-fits check depends only on the request: all
                 # rows in `busy` share the same committed length end_d
                 if busy and (n - end_d) + max_group <= min(
                         self.buckets[-1], self.capacity - end_d):
                     row = busy[0]
-                    self._mark("retain", row)
-                    self._admit(row, rid, ctx, candidates, t0,
-                                shared_depth=end_d, commit_from=n,
-                                suffix_in_burst=True)
-                    return True
+                    if not self.paged or self._ensure_pages(
+                            row, extent(end_d, n - end_d), exclude={row}):
+                        self._mark("retain", row)
+                        self._admit(row, rid, ctx, candidates, t0,
+                                    shared_depth=end_d, commit_from=n,
+                                    suffix_in_burst=True)
+                        return True
             if thr_d >= self.min_shared_prefix:
                 trimmable = [i for i in sorted(thr_rows)
                              if ok(i) and not self._rows[i].active
@@ -687,35 +964,112 @@ class ServeScheduler:
                     row = min(trimmable,
                               key=lambda i: self._rows[i].last_used)
                     r = self._rows[row]
-                    self._trie.remove(r.committed, row)
-                    r.committed = []
-                    r.retained = False                 # hold transfers
-                    self._mark("trim", row, keep=thr_d)
-                    self._admit(row, rid, ctx, candidates, t0,
-                                shared_depth=thr_d, commit_from=thr_d,
-                                suffix_in_burst=False)
-                    return True
+                    keep = thr_d
+                    usable = True
+                    if self.paged:
+                        ps = self.page_size
+                        bp, rem = divmod(thr_d, ps)
+                        bref = (int(self._pool.ref[self._tables[row, bp]])
+                                if rem else 1)
+                        if bref == 2:
+                            # the boundary page's only other holder is the
+                            # index (a second *row* would imply ref >= 3,
+                            # since adoption keeps the index's hold):
+                            # un-index it — and the deeper pages behind
+                            # it, unreachable once the boundary is gone —
+                            # so the recommit writes a private page
+                            dropped = self._trie.drop_pages(r.committed, bp)
+                            if dropped:
+                                self._pool.decref(dropped)
+                        elif bref > 2:
+                            # another row is reading the boundary page —
+                            # fall back to the aligned prefix, or skip
+                            # the rung if too short
+                            keep = bp * ps
+                            usable = keep >= self.min_shared_prefix
+                        if usable:
+                            self._unmap_row(row, from_page=-(-keep // ps))
+                            if not self._ensure_pages(row, extent(n, 0),
+                                                      exclude={row}):
+                                # pool exhausted mid-trim: the tail pages
+                                # are already gone, so reset the row to
+                                # fresh rather than leave its committed
+                                # block partially unmapped
+                                self._trie.remove(r.committed, row)
+                                r.committed, r.retained = [], False
+                                self._mark("free", row)
+                                self._unmap_row(row)
+                                usable = False
+                    if usable:
+                        self._trie.remove(r.committed, row)
+                        r.committed = []
+                        r.retained = False             # hold transfers
+                        self._mark("trim", row, keep=keep)
+                        self._admit(row, rid, ctx, candidates, t0,
+                                    shared_depth=keep, commit_from=keep,
+                                    suffix_in_burst=False)
+                        return True
+        row = None
         fresh = [i for i, r in enumerate(self._rows)
                  if not r.active and not r.retained and not r.committed]
         if fresh:
             row = fresh[0]
             self._mark("retain", row)
+        else:
+            stealable = [i for i, r in enumerate(self._rows)
+                         if not r.active and r.retained
+                         and r.pending_commit == 0]
+            if stealable:
+                row = min(stealable, key=lambda i: self._rows[i].last_used)
+                r = self._rows[row]
+                self._trie.remove(r.committed, row)
+                r.committed, r.retained = [], False
+                self._mark("free", row)                # drop hold -> reset
+                self._mark("retain", row)
+                if self.paged:
+                    self._unmap_row(row)
+        if row is None:
+            return False
+        if not self.paged:
             self._admit(row, rid, ctx, candidates, t0,
                         shared_depth=0, commit_from=0, suffix_in_burst=False)
             return True
-        stealable = [i for i, r in enumerate(self._rows)
-                     if not r.active and r.retained and r.pending_commit == 0]
-        if stealable:
-            row = min(stealable, key=lambda i: self._rows[i].last_used)
-            r = self._rows[row]
-            self._trie.remove(r.committed, row)
-            r.committed, r.retained = [], False
-            self._mark("free", row)                    # drop hold -> reset
-            self._mark("retain", row)
-            self._admit(row, rid, ctx, candidates, t0,
-                        shared_depth=0, commit_from=0, suffix_in_burst=False)
-            return True
-        return False
+        # paged rung 4: adopt any radix-indexed prefix pages (shared KV
+        # that survives row steals), then allocate private pages for the
+        # remainder. Shared pages take their reference *before* the
+        # private allocation so the allocator's eviction sweep cannot
+        # reclaim them out from under the admission.
+        depth = 0
+        adopted: List[int] = []
+        if self.share_prefix:
+            covered, pages = self._trie.match_pages(ctx)
+            if covered >= self.min_shared_prefix:
+                self._pool.incref(pages)
+                adopted, depth = list(pages), covered
+        need = -(-min(extent(n, 0), self.capacity) // self.page_size)
+        priv = self._alloc_pages(need - len(adopted), exclude={row})
+        if priv is None and adopted:
+            # not enough private pages alongside the shared prefix: give
+            # the prefix back and retry as a plain admission
+            self._pool.decref(adopted)
+            adopted, depth = [], 0
+            priv = self._alloc_pages(need, exclude={row})
+        if priv is None:
+            # the pool cannot host this request at all right now — undo
+            # this rung's reference mark and leave it queued
+            self._pending["retain"][row] -= 1
+            return False
+        self._tables[row, :len(adopted)] = adopted
+        self._tables[row, len(adopted):need] = priv
+        self._tables_dirty = True
+        if depth:
+            self._mark("adopt", row, keep=depth)
+            self.cross_row_hits += 1
+            self.cross_row_tokens += depth
+        self._admit(row, rid, ctx, candidates, t0,
+                    shared_depth=depth, commit_from=depth,
+                    suffix_in_burst=False)
+        return True
 
     # -- the batched step ----------------------------------------------------
 
@@ -840,8 +1194,13 @@ class ServeScheduler:
         across the k candidates or by a cross-request shared prefix."""
         r = self._rows[slot.row]
         n, k = slot.n_context, slot.n_candidates
-        logical_tokens = k * n + slot.slate_tokens
         computed = slot.prefill_tokens + slot.burst_tokens
+        # a prewarm (k == 0) has no logical k-prefill equivalent: its
+        # logical cost is exactly what it computed (cached_tokens = 0)
+        logical_tokens = (k * n + slot.slate_tokens) if k else computed
+        if k:
+            self._ctx_tokens_done += n
+            self._shared_tokens_done += slot.shared_prefix_tokens
         self._results[slot.rid] = RequestResult(
             rid=slot.rid, scores=list(slot.scores),
             latency_s=now - slot.submit_t,
@@ -860,13 +1219,21 @@ class ServeScheduler:
                 self._trie.remove(r.committed, slot.row)
                 r.committed, r.retained, r.stale = [], False, False
                 self._mark("free", slot.row)
+                if self.paged:
+                    self._unmap_row(slot.row)
             else:
                 r.retained = True                      # ref becomes the hold
+                if self.paged:
+                    # index the block's full pages so the prefix outlives
+                    # even a steal of this row (rung-4 radix map-in)
+                    self._publish_pages(slot.row)
         else:
             if r.committed and not r.active:
                 self._trie.remove(r.committed, slot.row)
                 r.committed = []
             self._mark("free", slot.row)
+            if self.paged and not r.active:
+                self._unmap_row(slot.row)
 
     def _harvest_one(self) -> bool:
         """Sync the oldest in-flight step's scores (the only host<->device
@@ -885,6 +1252,14 @@ class ServeScheduler:
             # never on queue emptiness, which overlap races (units are
             # popped at dispatch, one step ahead of this harvest)
             if u.score_at and all(sc is not None for sc in slot.scores):
+                self._finish(slot, now)
+            elif (slot.n_candidates == 0 and u.commit
+                  and slot.prefill.remaining == 0
+                  and slot in self._rows[row].active):
+                # a prewarm has no [SUM] to score: it finishes when its
+                # last committed chunk has been dispatched and a chunk
+                # harvested after that (device order makes the block
+                # fully written before any adopter reads it)
                 self._finish(slot, now)
         self._flush_row_ops()          # departing readers' refs drop once
         return True
@@ -963,6 +1338,8 @@ class ServeScheduler:
             jnp.asarray(valid), jnp.asarray(commit), jnp.asarray(seg))
         self.n_steps += 1
         self._bucket_steps[s] = self._bucket_steps.get(s, 0) + 1
+        if any(u.commit for _, _, u in work):
+            self._prefill_steps += 1
         qd = len(self._queue)
         self._qdepth_sum += qd
         self._qdepth_n += 1

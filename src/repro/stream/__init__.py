@@ -3,12 +3,15 @@
 Closes the train->serve loop (docs/streaming.md): events -> incremental
 prompt construction (``incremental``) -> async fixed-shape batching
 (``pipeline``) -> online fine-tuning with streaming eval (``online``) ->
-weight publication into the live serving fleet (``publish``).
+weight publication into the live serving fleet (``publish``) -> hot-user
+prefix prewarming of the serving fleet's paged KV cache (``prewarm``).
 """
 from repro.stream.incremental import IncrementalDTI
 from repro.stream.online import EvalWindow, OnlineTrainer, make_stream_loss_fn
 from repro.stream.pipeline import StreamPipeline
+from repro.stream.prewarm import PrefixPrewarmer
 from repro.stream.publish import ParamPublisher, ParamSubscriber
 
 __all__ = ["IncrementalDTI", "StreamPipeline", "OnlineTrainer", "EvalWindow",
-           "make_stream_loss_fn", "ParamPublisher", "ParamSubscriber"]
+           "make_stream_loss_fn", "ParamPublisher", "ParamSubscriber",
+           "PrefixPrewarmer"]

@@ -1,0 +1,254 @@
+"""RadixTree: path-compressed prefix index + page layer.
+
+Deterministic unit tests plus hypothesis property tests against two
+oracles: a brute-force prefix scan over the live owner sequences, and
+``ContextTrie`` (the reference hash-trie) — both must agree with
+``RadixTree.match`` on every query. Skipped-not-failed when hypothesis is
+absent (tests/_hyp.py)."""
+import pytest
+
+from repro.data.requests import ContextTrie, RadixTree
+
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
+
+
+# ---------------------------------------------------------------------------
+# the depth-0 regression (the ContextTrie.match bookkeeping bug)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cls", [ContextTrie, RadixTree])
+def test_match_depth0_reports_no_owners(cls):
+    """A first-token mismatch must report through_owners == set(), not the
+    root's through set (which holds every owner): a depth-0 'match' shares
+    nothing, so there is nothing to reuse. Pre-fix, ContextTrie returned
+    the root's through set and the admission ladder could trim a retained
+    block back to an empty prefix."""
+    t = cls()
+    t.insert([1, 2, 3], "a")
+    t.insert([4, 5], "b")
+    end_d, ends, thr_d, thr = t.match([9, 9, 9])
+    assert (end_d, ends) == (0, set())
+    assert (thr_d, thr) == (0, set())
+    # empty query is the same degenerate case
+    assert t.match([]) == (0, set(), 0, set())
+
+
+# ---------------------------------------------------------------------------
+# owner API — deterministic
+# ---------------------------------------------------------------------------
+
+def test_radix_insert_match_remove_mirrors_trie_semantics():
+    t = RadixTree()
+    t.insert([1, 2, 3], "a")
+    t.insert([1, 2, 3, 4, 5], "b")
+    t.insert([1, 9], "c")
+    end_d, ends, thr_d, thr = t.match([1, 2, 3, 4, 5, 6])
+    assert (end_d, ends) == (5, {"b"}) and (thr_d, thr) == (5, {"b"})
+    end_d, ends, thr_d, thr = t.match([1, 2, 3, 4])
+    assert (end_d, ends) == (3, {"a"}) and (thr_d, thr) == (4, {"b"})
+    end_d, ends, thr_d, thr = t.match([1, 2, 7])
+    assert (end_d, ends) == (0, set()) and thr_d == 2 and thr == {"a", "b"}
+    assert t.owner_length("b") == 5
+    t.remove([1, 2, 3, 4, 5], "b")
+    end_d, ends, thr_d, thr = t.match([1, 2, 3, 4])
+    assert (end_d, ends) == (3, {"a"}) and (thr_d, thr) == (3, {"a"})
+    t.remove([1, 2, 3], "a")
+    t.remove([1, 9], "c")
+    assert len(t) == 0 and not t._root.kids
+
+
+def test_radix_partial_edge_depth_counted():
+    """Path compression must not round the match depth down to a node
+    boundary: a query diverging mid-edge still shares the edge's prefix."""
+    t = RadixTree()
+    t.insert([1, 2, 3, 4, 5, 6], "a")
+    end_d, ends, thr_d, thr = t.match([1, 2, 3, 9])
+    assert (end_d, ends) == (0, set())
+    assert (thr_d, thr) == (3, {"a"})
+
+
+def test_radix_one_sequence_per_owner():
+    t = RadixTree()
+    t.insert([1], "a")
+    with pytest.raises(AssertionError):
+        t.insert([2], "a")
+
+
+def test_radix_split_preserves_owner_sets():
+    """Inserting a diverging sequence splits an edge; owners covering the
+    split point must appear in the upper node's through set."""
+    t = RadixTree()
+    t.insert([1, 2, 3, 4], "a")
+    t.insert([1, 2, 9], "b")             # splits [1,2,3,4] after 2 tokens
+    end_d, ends, thr_d, thr = t.match([1, 2])
+    assert (end_d, ends) == (0, set())
+    assert (thr_d, thr) == (2, {"a", "b"})
+    t.remove([1, 2, 3, 4], "a")
+    assert t.match([1, 2, 9]) == (3, {"b"}, 3, {"b"})
+
+
+# ---------------------------------------------------------------------------
+# owner API — property tests vs brute force and vs ContextTrie
+# ---------------------------------------------------------------------------
+
+def _oracle_match(seqs, tokens):
+    """Brute-force ContextTrie.match semantics over live sequences."""
+    def cpl(s):
+        i = 0
+        while i < len(s) and i < len(tokens) and s[i] == tokens[i]:
+            i += 1
+        return i
+    end_depth, end_owners = 0, set()
+    thr_depth = 0
+    for o, s in seqs.items():
+        l = cpl(s)
+        thr_depth = max(thr_depth, l)
+        if l and l == len(s):
+            if l > end_depth:
+                end_depth, end_owners = l, {o}
+            elif l == end_depth:
+                end_owners.add(o)
+    if thr_depth == 0:
+        return 0, set(), 0, set()
+    thr_owners = {o for o, s in seqs.items() if cpl(s) >= thr_depth}
+    return end_depth, end_owners, thr_depth, thr_owners
+
+
+_ops = st.lists(
+    st.tuples(st.sampled_from(["ins", "del", "match"]),
+              st.integers(0, 7),
+              st.lists(st.integers(0, 3), min_size=0, max_size=10)),
+    min_size=1, max_size=60)
+
+
+@settings(max_examples=200, deadline=None)
+@given(_ops)
+def test_radix_matches_bruteforce_and_trie(ops):
+    """Any interleaving of insert/remove/match agrees with the brute-force
+    oracle AND with ContextTrie on every query."""
+    radix, trie, live = RadixTree(), ContextTrie(), {}
+    for op, owner, toks in ops:
+        if op == "ins" and owner not in live and toks:
+            radix.insert(toks, owner)
+            trie.insert(toks, owner)
+            live[owner] = list(toks)
+        elif op == "del" and owner in live:
+            radix.remove(live[owner], owner)
+            trie.remove(live[owner], owner)
+            del live[owner]
+        else:
+            want = _oracle_match(live, toks)
+            assert radix.match(toks) == want
+            assert trie.match(toks) == want
+            assert len(radix) == len(trie) == len(live)
+    for o, s in live.items():
+        assert radix.owner_length(o) == len(s)
+        got = radix.match(s)
+        assert o in got[1] and got[0] == len(s)
+
+
+# ---------------------------------------------------------------------------
+# page layer — deterministic
+# ---------------------------------------------------------------------------
+
+def test_attach_and_match_pages_roundtrip():
+    t = RadixTree(page_size=4)
+    seq = list(range(20, 31))            # 11 tokens -> 2 full pages
+    new = t.attach_pages(seq, [7, 8])
+    assert new == [7, 8] and t.held_pages() == 2
+    assert t.match_pages(seq) == (8, [7, 8])
+    # a shorter query only reaches the pages it covers
+    assert t.match_pages(seq[:6]) == (4, [7])
+    assert t.match_pages(seq[:3]) == (0, [])
+    # diverging queries stop at the divergence
+    assert t.match_pages(seq[:4] + [99] * 6) == (4, [7])
+    assert t.match_pages([99]) == (0, [])
+    # re-attaching the same prefix adopts nothing new, even with fresh ids
+    assert t.attach_pages(seq, [7, 9]) == []
+    assert t.match_pages(seq) == (8, [7, 8])
+
+
+def test_attach_pages_extends_a_published_prefix():
+    t = RadixTree(page_size=2)
+    assert t.attach_pages([1, 2, 3, 4], [5, 6]) == [5, 6]
+    # a longer commit of the same prefix publishes only the new tail pages
+    assert t.attach_pages([1, 2, 3, 4, 7, 8], [5, 6, 9]) == [9]
+    assert t.match_pages([1, 2, 3, 4, 7, 8, 0]) == (6, [5, 6, 9])
+
+
+def test_evict_pages_lru_and_refcount_gate():
+    import numpy as np
+    t = RadixTree(page_size=2)
+    t.attach_pages([1, 2, 3, 4], [0, 1])
+    t.attach_pages([8, 9], [2])
+    t.match_pages([1, 2, 3, 4])          # touch -> [8,9] is now LRU
+    ref = np.array([1, 1, 1], np.int32)
+    assert t.evict_pages(1, ref) == [2]  # LRU node first
+    # deepest-first within a node: page index 1 before 0
+    assert t.evict_pages(1, ref) == [1]
+    # a page something else still references (ref > 1) is never evicted
+    ref = np.array([2, 2, 2], np.int32)
+    assert t.evict_pages(5, ref) == []
+    assert t.match_pages([1, 2]) == (2, [0])
+
+
+def test_owner_removal_keeps_page_nodes():
+    """A stolen row's prefix stays indexed: removing the owner must not
+    prune nodes that still hold pages (the cross-row reuse guarantee)."""
+    t = RadixTree(page_size=2)
+    t.insert([1, 2, 3, 4], "row0")
+    t.attach_pages([1, 2, 3, 4], [5, 6])
+    t.remove([1, 2, 3, 4], "row0")
+    assert len(t) == 0
+    assert t.match_pages([1, 2, 3, 4]) == (4, [5, 6])
+    # owner queries see nothing (no committed row), pages still there
+    assert t.match([1, 2, 3, 4])[1] == set()
+    assert set(t.drop_all_pages()) == {5, 6}
+    assert t.held_pages() == 0 and not t._root.kids
+
+
+# ---------------------------------------------------------------------------
+# page layer — property test vs a flat-dict oracle
+# ---------------------------------------------------------------------------
+
+_PS = 2
+_page_ops = st.lists(
+    st.tuples(st.sampled_from(["attach", "match"]),
+              st.lists(st.integers(0, 2), min_size=0, max_size=8)),
+    min_size=1, max_size=40)
+
+
+@settings(max_examples=150, deadline=None)
+@given(_page_ops)
+def test_page_layer_matches_flat_oracle(ops):
+    """attach/match agree with a flat dict keyed by the page's covering
+    token tuple (the semantic content of the radix page index)."""
+    t = RadixTree(page_size=_PS)
+    flat = {}                            # tuple(tokens[:i*ps]) -> pid
+    next_pid = [0]
+    for op, toks in ops:
+        n_full = len(toks) // _PS
+        if op == "attach":
+            pids = []
+            for i in range(n_full):
+                key = tuple(toks[:(i + 1) * _PS])
+                if key not in flat:
+                    flat[key] = next_pid[0]
+                    next_pid[0] += 1
+                pids.append(flat[key])
+            got_new = t.attach_pages(toks, pids)
+            assert set(got_new) <= set(pids)
+        else:
+            covered, pages = t.match_pages(toks)
+            assert covered == len(pages) * _PS
+            # every matched page is the indexed page for that exact prefix
+            for i, pid in enumerate(pages):
+                assert flat.get(tuple(toks[:(i + 1) * _PS])) == pid
+            # maximality: if the oracle knows the next page, so must we
+            nxt = tuple(toks[:(len(pages) + 1) * _PS])
+            if len(nxt) == (len(pages) + 1) * _PS:
+                assert nxt not in flat
+
+
+if not HAVE_HYPOTHESIS:                   # pragma: no cover
+    pass

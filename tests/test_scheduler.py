@@ -259,9 +259,9 @@ def test_submit_rejections_name_request_and_candidate():
     cfg = _cfg()
     params = init_params(jax.random.PRNGKey(13), cfg)
     sched = _sched(params, cfg, buckets=(8,), capacity=16)
-    with pytest.raises(AssertionError, match=r"request 7: candidate 1 "):
+    with pytest.raises(ValueError, match=r"request 7: candidate 1 "):
         sched.submit([[10, 11]], [[12, 13], list(range(20, 40))], rid=7)
-    with pytest.raises(AssertionError, match=r"request 9: context 13 "):
+    with pytest.raises(ValueError, match=r"request 9: context 13 "):
         sched.submit([[20 + i] for i in range(12)], [[12, 13, 14]], rid=9)
 
 

@@ -409,3 +409,69 @@ def test_stream_bench_machinery_token_reduction(tmp_path):
         assert m["trained_tokens"] > 0 and m["steps"] > 0
         assert m["auc_over_time"]
     assert modes["stream_dti"]["freshness_p95_s"] > 0.0
+
+
+class TestPrefixPrewarmer:
+    """Stream->serve cache priming: hot-user selection, re-warm gating,
+    swap-tick behaviour. The scheduler end of the contract (candidate-less
+    admission, radix publication, identical scores) is covered by
+    tests/test_paged_cache.py::test_prewarm_primes_the_radix_index."""
+
+    class _Sched:
+        def __init__(self):
+            self.calls = []
+
+        def prewarm(self, context):
+            self.calls.append([list(t) for t in context])
+            return len(self.calls)       # a fake rid
+
+    def _dti(self, users):
+        inc = IncrementalDTI(n_ctx=N_CTX, k=K, max_len=MAX_LEN)
+        for u, m in users.items():
+            items, labels = _history(m, seed=u)
+            inc.seed_history(u, items, labels)
+        return inc
+
+    def test_hot_users_warm_once_until_history_grows(self):
+        from repro.stream import PrefixPrewarmer
+        inc = self._dti({0: 3, 1: 3, 2: 3})
+        sched = self._Sched()
+        pw = PrefixPrewarmer(inc, sched, top_k=2, min_events=2.0, decay=0.5)
+        pw.observe([{"user": 0}] * 5 + [{"user": 1}] * 4 + [{"user": 2}] * 1)
+        rids = pw.tick()
+        # top_k=2 by heat: users 0 and 1; user 2 is below min_events
+        assert len(rids) == 2 and pw.warmed == 2
+        assert sched.calls[0] == [list(t) for t in inc._users[0].items]
+        # same heat, same histories -> nothing new to warm
+        pw.observe([{"user": 0}] * 5 + [{"user": 1}] * 4)
+        assert pw.tick() == []
+        # history growth re-arms the user
+        inc.extend_prompts(_events(*_history(4, seed=0), 3, 4, user=0))
+        pw.observe([{"user": 0}] * 5)
+        assert len(pw.tick()) == 1
+        assert sched.calls[-1] == [list(t) for t in inc._users[0].items]
+
+    def test_swap_tick_skips_and_rearms(self):
+        from repro.stream import PrefixPrewarmer
+        inc = self._dti({0: 3})
+        sched = self._Sched()
+        pw = PrefixPrewarmer(inc, sched, top_k=1, min_events=1.0, decay=1.0)
+        pw.observe([{"user": 0}] * 3)
+        assert len(pw.tick()) == 1
+        # a hot-swap tick warms nothing but drops the warmed markers...
+        assert pw.tick(swapped=True) == []
+        assert pw.skipped_swap_ticks == 1
+        # ...so the unchanged prefix re-warms under the new weights
+        assert len(pw.tick()) == 1 and pw.warmed == 2
+
+    def test_heat_decays_cold_users_out(self):
+        from repro.stream import PrefixPrewarmer
+        inc = self._dti({0: 3})
+        sched = self._Sched()
+        pw = PrefixPrewarmer(inc, sched, top_k=4, min_events=2.0, decay=0.5)
+        pw.observe([{"user": 0}] * 4)
+        assert len(pw.tick()) == 1       # heat 4 -> 2.0, still hot
+        assert pw.tick() == []           # 1.0: below the gate (and warmed)
+        for _ in range(12):
+            pw.tick()
+        assert pw._heat == {}            # decayed out entirely
