@@ -132,11 +132,34 @@ def embedding_bag_bench():
          f"{B * H / t:.1f} lookups/us")
 
 
+def autotune_sweep():
+    """Report what the block-size autotuner resolves (and, on TPU,
+    measures) for the shapes the serving/training paths actually run.
+    Off-TPU the sweeps time nothing — the rows carry the table defaults so
+    the artifact still records what each geometry resolves to."""
+    from repro.kernels.autotune import (measure_decode, measure_train,
+                                        measured_table)
+    for cap in (128, 256, 1024):
+        r = measure_decode(cap)
+        emit(f"autotune_decode_cap{cap}",
+             min(r["timings_us"].values()) if r["measured"] else 0.0,
+             f"block={r['block']} "
+             + ("(measured)" if r["measured"] else "(table default)"))
+    for seq in (512, 2048):
+        r = measure_train(seq)
+        emit(f"autotune_train_S{seq}",
+             min(r["timings_us"].values()) if r["measured"] else 0.0,
+             f"block={r['block']} "
+             + ("(measured)" if r["measured"] else "(table default)"))
+    ACCOUNTS["autotune_measured"] = measured_table()
+
+
 def main(json_path: Optional[str] = None):
     n0 = len(ROWS)
     attention_scaling()
     attention_train_step()
     embedding_bag_bench()
+    autotune_sweep()
     if json_path:
         with open(json_path, "w") as f:
             json.dump({"rows": ROWS[n0:], "accounts": ACCOUNTS}, f,

@@ -38,6 +38,13 @@ per request), all producing the same p(click) per candidate:
     dense decode einsums, so the perf trajectory records dense vs kernel
     side by side.
 
+``--kv-dtype int8`` appends a ``quantized_vs_bf16`` block: the revisit
+drain re-run twice — int8 KV pages vs bf16 — at an *equal pool byte*
+budget (``--quant-pages`` bf16 pages; int8 gets the same bytes, ~1.8x the
+pages). The run exits nonzero unless int8 retains >= 1.5x the cross-row
+prefix tokens and a strictly higher prefix hit rate than bf16, and both
+runs' scores stay within 0.05 of the fp32 naive oracle.
+
 ``--repeat-frac`` makes that fraction of requests revisit an earlier
 context with a fresh slate (``repro.data.requests.make_request_stream``),
 the traffic shape prefix sharing exploits. ``--ctx-heavy-tail`` switches
@@ -65,6 +72,7 @@ import sys
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
@@ -152,7 +160,8 @@ def run_multi_target(params, cfg, requests, max_len):
 
 def run_scheduler(params, cfg, requests, *, n_slots, capacity, buckets,
                   attn_impl="dense", monolithic=False, overlap=True,
-                  arrival_s=0.0, reps=1, paged=True):
+                  arrival_s=0.0, reps=1, paged=True,
+                  cache_dtype=None, kv_dtype=None, n_pages=None):
     """Continuous batching: shared-context cache + non-committing bursts +
     cross-request prefix sharing, on the dense or Pallas decode path.
     ``monolithic=True`` runs the pre-budget chunking (+ per-step sync) as
@@ -176,7 +185,10 @@ def run_scheduler(params, cfg, requests, *, n_slots, capacity, buckets,
                                capacity=capacity, window=cfg.window,
                                buckets=buckets, attn_impl=attn_impl,
                                monolithic_prefill=monolithic,
-                               overlap=overlap, paged=paged)
+                               overlap=overlap, paged=paged,
+                               cache_dtype=(cache_dtype if cache_dtype
+                                            is not None else jnp.float32),
+                               kv_dtype=kv_dtype, n_pages=n_pages)
         sched.warmup()                       # compile every bucket shape
         sched.reset_stats()
         t0 = time.perf_counter()
@@ -219,6 +231,43 @@ def run_scheduler(params, cfg, requests, *, n_slots, capacity, buckets,
         if best is None or out["latency_p99_ms"] < best["latency_p99_ms"]:
             best = out
     return best
+
+
+def run_quant_compare(params, cfg, requests, *, n_slots, capacity, buckets,
+                      arrival_s=0.0, base_pages=16, page_size=16):
+    """int8 vs bf16 KV on the revisit drain at an *equal pool byte* budget.
+
+    The bf16 scheduler gets ``base_pages`` pages; the int8 scheduler gets
+    however many pages the same HBM bytes buy (per-token cost from
+    ``repro.serve.cache.kv_token_bytes``, scale sidecar included — with
+    the smoke config int8 is ~1.8x denser). Same stream, same slots, same
+    capacity: the only free variable is what the byte budget retains, so
+    int8's extra pages should show up directly as cross-row prefix hits
+    the bf16 pool had to evict.
+    """
+    from repro.serve.cache import cache_shape, kv_token_bytes
+
+    cap_eff = -(-capacity // page_size) * page_size   # scheduler's rounding
+    tb = {}
+    for label, kvd in (("bf16", None), ("int8", "int8")):
+        spec = cache_shape(cfg, n_slots, cap_eff, dtype=jnp.bfloat16,
+                           kv_dtype=kvd, page_size=page_size,
+                           n_pages=base_pages)
+        tb[label] = kv_token_bytes(spec)
+    # floor keeps the int8 pool at-or-under the bf16 byte budget
+    int8_pages = max(base_pages, int(base_pages * tb["bf16"] / tb["int8"]))
+    out = {}
+    for label, kvd, n_pages in (("bf16", None, base_pages),
+                                ("int8", "int8", int8_pages)):
+        m = run_scheduler(params, cfg, requests, n_slots=n_slots,
+                          capacity=capacity, buckets=buckets,
+                          arrival_s=arrival_s, cache_dtype=jnp.bfloat16,
+                          kv_dtype=kvd, n_pages=n_pages)
+        m["n_pages"] = n_pages
+        m["kv_token_bytes"] = tb[label]
+        m["pool_bytes"] = int(n_pages * page_size * tb[label])
+        out[label] = m
+    return out
 
 
 def main():
@@ -265,6 +314,18 @@ def main():
                          "(default 3 under --ctx-heavy-tail, else 1) — "
                          "container timing noise otherwise swamps the "
                          "policy delta")
+    ap.add_argument("--kv-dtype", default="native", dest="kv_dtype",
+                    choices=("native", "int8"),
+                    help="'int8' adds a quantized_vs_bf16 block: the "
+                         "revisit drain re-run with int8 KV pages vs bf16 "
+                         "at an equal pool byte budget, gated on int8 "
+                         "retaining strictly more cross-row prefix")
+    ap.add_argument("--quant-pages", type=int, default=16,
+                    dest="quant_pages",
+                    help="bf16-page budget of the quantized_vs_bf16 "
+                         "compare (int8 gets the same bytes; default 16, "
+                         "raised automatically if one row's capacity "
+                         "needs more)")
     ap.add_argument("--dump-scores", action="store_true", dest="dump_scores",
                     help="embed every mode's raw per-candidate scores in "
                          "the JSON artifact (large; off by default)")
@@ -402,6 +463,41 @@ def main():
                               ["page_evictions"],
         },
     }
+
+    quant = None
+    if args.kv_dtype == "int8":
+        # a pool that can't hold one fully-occupied row deadlocks
+        # admission: lift the page budget to row capacity + slack first
+        page_size = 16
+        base_pages = max(args.quant_pages,
+                         -(-capacity // page_size) + 2)
+        quant = run_quant_compare(
+            params, cfg, requests, n_slots=args.slots, capacity=capacity,
+            buckets=buckets, arrival_s=arrival_s, base_pages=base_pages,
+            page_size=page_size)
+        q_deltas = {}
+        for label in quant:
+            sc = np.asarray(quant[label].pop("scores"))
+            q_deltas[label] = float(np.max(np.abs(sc - ref)))
+        qi, qb = quant["int8"]["telemetry"], quant["bf16"]["telemetry"]
+        result["quantized_vs_bf16"] = {
+            "bf16": quant["bf16"], "int8": quant["int8"],
+            "score_max_abs_delta_vs_naive": q_deltas,
+            "pool_bytes_bf16": quant["bf16"]["pool_bytes"],
+            "pool_bytes_int8": quant["int8"]["pool_bytes"],
+            "pages_bf16": quant["bf16"]["n_pages"],
+            "pages_int8": quant["int8"]["n_pages"],
+            "cross_row_tokens_ratio": (qi["cross_row_tokens"]
+                                       / max(qb["cross_row_tokens"], 1)),
+        }
+        for label in ("bf16", "int8"):
+            t = quant[label]["telemetry"]
+            print(f"  quant[{label}]: {quant[label]['n_pages']} pages "
+                  f"({quant[label]['pool_bytes']} B)  cross-row tokens "
+                  f"{t['cross_row_tokens']}  hit-rate "
+                  f"{t['prefix_hit_rate']:.3f}  evictions "
+                  f"{t['page_evictions']}  |dp| {q_deltas[label]:.2e}")
+
     if args.json:
         with open(args.json, "w") as f:
             json.dump(result, f, indent=2)
@@ -433,6 +529,31 @@ def main():
                 f"baseline hit rate "
                 f"{pvs['prefix_hit_rate_per_slot']:.3f}, paged "
                 f"{pvs['prefix_hit_rate_paged']:.3f}")
+    if quant is not None:
+        # int8 scores must stay near the fp32 naive oracle (quantization
+        # error on p(click) is ~1e-3 at smoke scale; 0.05 catches a broken
+        # dequant path, not noise), and both runs must be watchdog-clean
+        qv = result["quantized_vs_bf16"]
+        for label in ("bf16", "int8"):
+            if qv["score_max_abs_delta_vs_naive"][label] > 0.05:
+                bad.append(f"quant[{label}] scores diverged from naive by "
+                           f"{qv['score_max_abs_delta_vs_naive'][label]:.3f}"
+                           f" (> 0.05)")
+            if quant[label]["telemetry"]["watchdog_fired"]:
+                bad.append(f"quant[{label}]: watchdog fired")
+        if args.repeat_frac > 0 and n_requests >= 4 * args.slots:
+            # the tentpole's payoff gate: at equal pool bytes the denser
+            # int8 pages must retain strictly more reusable prefix
+            if qv["cross_row_tokens_ratio"] < 1.5:
+                bad.append(
+                    f"int8 cross-row prefix tokens only "
+                    f"{qv['cross_row_tokens_ratio']:.2f}x bf16's at equal "
+                    f"pool bytes (need >= 1.5x)")
+            if (qi["prefix_hit_rate"] <= qb["prefix_hit_rate"]):
+                bad.append(
+                    f"int8 prefix hit rate {qi['prefix_hit_rate']:.3f} did "
+                    f"not beat bf16's {qb['prefix_hit_rate']:.3f} at equal "
+                    f"pool bytes")
     if bad:
         print(f"[serve_bench] INVALID RUN: {'; '.join(bad)}",
               file=sys.stderr)

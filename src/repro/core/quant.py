@@ -1,0 +1,58 @@
+"""Symmetric int8 quantization — the one contract every quantized surface
+shares (serve KV pages, the decode kernel's fused dequant, int8 embedding
+tables; see docs/serving.md and docs/kernels.md).
+
+Scheme: per-group symmetric absmax. For a group ``x`` (one reduction axis):
+
+    scale = max(|x|) / 127
+    q     = clip(round(x / scale), -127, 127)   int8
+    x'    = q * scale                           fp32
+
+Properties the tests pin (tests/test_kv_quant.py):
+
+* **error bound** — ``|x - x'| <= scale / 2`` per element: ``x / scale``
+  lies in [-127, 127] by construction, so the only loss is the rounding,
+  which is at most half a step. Zero groups quantize to exact zeros.
+* **scale locality** — dequantization needs only (q, scale) of the group
+  itself. This is what makes quantized KV pages *movable*: a page carries
+  its own scales, so cross-row adoption / row steals relocate bytes
+  without any requantization (docs/serving.md).
+* **linearity** — ``scale`` multiplies out of any linear map of the
+  group. In particular RoPE (a per-(token, head) rotation) commutes with
+  the per-(token, head) scale: ``rope(q * scale) == rope(q) * scale`` —
+  the identity that lets the decode kernel rope raw int8 keys in VMEM and
+  apply the scale afterwards, so quantized KV never round-trips through
+  bf16 in HBM (repro.kernels.decode_attn).
+
+``-127`` (not -128) keeps the grid symmetric: negating a tensor negates
+its quantization exactly.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+#: Largest representable magnitude of the symmetric int8 grid.
+Q8_MAX = 127.0
+
+
+def quantize_q8(x: jax.Array, axis: int = -1) -> Tuple[jax.Array, jax.Array]:
+    """Quantize ``x`` to (int8 codes, fp32 scales) with one scale per
+    group along ``axis`` (the reduced axis disappears from ``scale``)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=axis) / Q8_MAX
+    safe = jnp.where(scale > 0.0, scale, 1.0)
+    q = jnp.round(xf / jnp.expand_dims(safe, axis))
+    q = jnp.clip(q, -Q8_MAX, Q8_MAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_q8(q: jax.Array, scale: jax.Array, axis: int = -1) -> jax.Array:
+    """Reconstruct fp32 values: ``q * scale`` broadcast along ``axis``."""
+    return q.astype(jnp.float32) * jnp.expand_dims(
+        scale.astype(jnp.float32), axis)
+
+
+__all__ = ["Q8_MAX", "quantize_q8", "dequantize_q8"]

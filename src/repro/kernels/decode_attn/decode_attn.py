@@ -68,6 +68,21 @@ at identical logical slots (RoPE is applied per-row positions on the
 gathered view, so it cannot move inside the kernel). The kernel
 therefore computes bit-identical outputs for paged and contiguous
 layouts; see ``make_decode_fn`` and tests/test_paged_cache.py.
+
+**Quantized KV (int8 codes + fp32 scale sidecar) is dequantized in the
+kernel body.** On the quant path (``k_scale`` operand present) the k/v
+tiles are staged as raw int8 codes straight from the cache — unroped,
+undequantized — so quantized KV never round-trips through bf16 in HBM.
+Per kv block the kernel: casts codes to fp32 in VMEM, RoPEs the
+``[rope_start:]`` span using the staged slot positions (GQA rotates the
+whole head dim, ``rope_start = 0``; absorbed MLA only the ``kpe`` tail,
+``rope_start = r_kv``), then multiplies in the per-(slot, head) scale —
+legal in either order because the rotation stays inside one scale group
+(see ``repro.core.quant``). Two scale groups (``k_scale[..., 2]``) split
+at ``rope_start`` cover MLA's separately-quantized latent/rope streams.
+The NoPE stream needs no second cache operand when quantized: it is the
+same codes dequantized without rotation, halving the kernel's
+full-capacity HBM traffic vs the bf16 NoPE path.
 """
 from __future__ import annotations
 
@@ -93,15 +108,17 @@ class DecodeStatics(NamedTuple):
     block: int           # kv block size (divides the padded capacity)
     use_seg: bool        # in-burst candidate isolation active
     use_nope: bool       # SUM rows score the NoPE+ALiBi stream
+    quant: bool          # int8 KV codes + fp32 scales; dequant in VMEM
+    rope_start: int      # first key dim RoPE rotates (quant path only)
     interpret: bool
 
 
 def _kernel(pos_q_ref, pos_k_ref, sum_q_ref, seg_q_ref, seg_k_ref, alibi_ref,
-            q_ref, k_ref, v_ref, qn_ref, kn_ref,
+            q_ref, k_ref, v_ref, qn_ref, kn_ref, ks_ref, vs_ref, rinv_ref,
             o_ref,
             m_ref, l_ref, acc_ref,
             *, n_kv: int, window: int, scale: float,
-            use_seg: bool, use_nope: bool):
+            use_seg: bool, use_nope: bool, quant: bool, rope_start: int):
     ikv = pl.program_id(2)
 
     @pl.when(ikv == 0)
@@ -118,6 +135,37 @@ def _kernel(pos_q_ref, pos_k_ref, sum_q_ref, seg_q_ref, seg_k_ref, alibi_ref,
     def _block():
         q = q_ref[0, :, 0, :].astype(jnp.float32)          # (s, Dqk)
         k = k_ref[0, :, 0, :].astype(jnp.float32)          # (blk, Dqk)
+        kn = None
+        if quant:
+            # int8 path: the staged k tile is raw *unroped* codes. Build
+            # the per-dim scale row (one scale per head group; two groups
+            # when the latent/rope streams of absorbed MLA are separately
+            # quantized, split at rope_start), dequantize for the NoPE
+            # stream, and RoPE the [rope_start:] span in VMEM. Scales are
+            # per (slot, head), so rope-then-scale == scale-then-rope (the
+            # rotation is within the group) — scaling last keeps one
+            # multiply off the trig path.
+            dk = k.shape[-1]
+            sc = ks_ref[0, :, 0, :]                        # (blk, G)
+            if sc.shape[-1] == 1:
+                sc_vec = sc
+            else:
+                col = jax.lax.broadcasted_iota(jnp.int32, (1, dk), 1)
+                sc_vec = jnp.where(col < rope_start,
+                                   sc[:, 0:1], sc[:, 1:2])
+            if use_nope:
+                kn = k * sc_vec                            # unroped dequant
+            p = jnp.maximum(pos_k, 0).astype(jnp.float32)
+            ang = p[:, None] * rinv_ref[...][None, :]      # (blk, span/2)
+            cosv, sinv = jnp.cos(ang), jnp.sin(ang)
+            span = k[:, rope_start:]
+            half = span.shape[-1] // 2
+            x1, x2 = span[:, :half], span[:, half:]
+            rot = jnp.concatenate([x1 * cosv - x2 * sinv,
+                                   x1 * sinv + x2 * cosv], axis=-1)
+            if rope_start:
+                rot = jnp.concatenate([k[:, :rope_start], rot], axis=-1)
+            k = rot * sc_vec
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
 
@@ -125,7 +173,8 @@ def _kernel(pos_q_ref, pos_k_ref, sum_q_ref, seg_q_ref, seg_k_ref, alibi_ref,
         d = pos_q[:, None] - pos_k[None, :]                # (s, blk)
         if use_nope:
             qn = qn_ref[0, :, 0, :].astype(jnp.float32)
-            kn = kn_ref[0, :, 0, :].astype(jnp.float32)
+            if not quant:
+                kn = kn_ref[0, :, 0, :].astype(jnp.float32)
             sn = jax.lax.dot_general(qn, kn, (((1,), (1,)), ((), ())),
                                      preferred_element_type=jnp.float32)
             sn = sn * scale - alibi_ref[0] * d.astype(jnp.float32)
@@ -150,6 +199,8 @@ def _kernel(pos_q_ref, pos_k_ref, sum_q_ref, seg_q_ref, seg_k_ref, alibi_ref,
         m_ref[:, 0] = m_new
 
         v = v_ref[0, :, 0, :].astype(jnp.float32)          # (blk, Dv)
+        if quant:
+            v = v * vs_ref[0, :, 0, :]                     # (blk, 1) scale
         acc_ref[...] = (acc_ref[...] * alpha[:, None]
                         + jax.lax.dot_general(
                             w, v, (((1,), (0,)), ((), ())),
@@ -176,6 +227,7 @@ def _pad_cap(x: jax.Array, cap_pad: int, fill) -> jax.Array:
 def prepare_decode_inputs(
     q: jax.Array,                 # (B, s, H, Dqk)   RoPE'd queries
     k: jax.Array,                 # (B, cap, Hk, Dqk) read-time-RoPE'd keys
+                                  #   (int8 unroped codes on the quant path)
     v: jax.Array,                 # (B, cap, Hk, Dv)
     pos_q: jax.Array,             # (B, s) int32
     pos_k: jax.Array,             # (B, cap) int32; -1 = empty slot
@@ -190,12 +242,23 @@ def prepare_decode_inputs(
     scale: Optional[float],
     block_size: int,
     interpret: bool,
+    k_scale: Optional[jax.Array] = None,    # (B, cap, Hk, G) fp32, G in {1,2}
+    v_scale: Optional[jax.Array] = None,    # (B, cap, Hk) fp32
+    rope_inv: Optional[jax.Array] = None,   # ((Dqk - rope_start)/2,) fp32
+    rope_start: int = 0,
 ) -> Tuple[DecodeStatics, Tuple[jax.Array, ...]]:
     """Normalise optional operands to concrete arrays + hashable statics.
 
     Pads the capacity axis to a multiple of the kv block (padding slots
     carry ``pos = -1`` so the occupancy skip drops them for free) — the
     scheduler's ``capacity = ctx + bucket`` need not be block-aligned.
+
+    ``k_scale`` switches the kernel to the quantized-KV contract
+    (docs/kernels.md): ``k``/``v`` are raw int8 codes straight from the
+    cache — unroped, undequantized — and the kernel dequantizes and RoPEs
+    ([``rope_start``:] span, inverse frequencies ``rope_inv``) in VMEM.
+    The NoPE stream then needs no separate ``k_nope`` operand: it is the
+    same codes dequantized without rotation.
     """
     b, s_len, h, d = q.shape
     cap = k.shape[1]
@@ -207,6 +270,12 @@ def prepare_decode_inputs(
     blk = min(block_size, cap)
     cap_pad = ((cap + blk - 1) // blk) * blk
 
+    quant = k_scale is not None
+    if quant:
+        assert v_scale is not None and rope_inv is not None, \
+            "quantized decode needs k_scale, v_scale and rope_inv together"
+        assert k_nope is None, \
+            "quantized decode derives the NoPE stream from the codes"
     use_nope = q_nope is not None and sum_q is not None
     use_seg = seg_q is not None and seg_k is not None
     i32 = functools.partial(jnp.asarray, dtype=jnp.int32)
@@ -219,21 +288,35 @@ def prepare_decode_inputs(
     # element placeholders (their BlockSpecs shrink to match) instead of a
     # full-capacity zero tensor per layer per step
     qn = q_nope if use_nope else jnp.zeros((b, 1, 1, 1), q.dtype)
-    kn = k_nope if use_nope else jnp.zeros((b, 1, 1, 1), k.dtype)
+    use_kn = use_nope and not quant
+    kn = k_nope if use_kn else jnp.zeros((b, 1, 1, 1), k.dtype)
+    # scale sidecars: padded slots get scale 0 (their pos = -1 already
+    # makes them unattendable; 0-scale dequant is exact zeros either way)
+    ks = (k_scale.astype(jnp.float32) if quant
+          else jnp.zeros((b, 1, 1, 1), jnp.float32))
+    vs = (v_scale.astype(jnp.float32)[..., None] if quant
+          else jnp.zeros((b, 1, 1, 1), jnp.float32))
+    rinv = (rope_inv.astype(jnp.float32) if quant
+            else jnp.zeros((1,), jnp.float32))
 
     arrays = (pos_q.astype(jnp.int32),
               _pad_cap(pos_k.astype(jnp.int32), cap_pad, -1),
               sum_q_i, seg_q_i, _pad_cap(seg_k_i, cap_pad, -1),
               alibi_f, q, _pad_cap(k, cap_pad, 0), _pad_cap(v, cap_pad, 0),
-              qn, _pad_cap(kn, cap_pad, 0) if use_nope else kn)
+              qn, _pad_cap(kn, cap_pad, 0) if use_kn else kn,
+              _pad_cap(ks, cap_pad, 0) if quant else ks,
+              _pad_cap(vs, cap_pad, 0) if quant else vs,
+              rinv)
     st = DecodeStatics(window=int(window), scale=float(scale), block=blk,
                        use_seg=use_seg, use_nope=use_nope,
+                       quant=quant, rope_start=int(rope_start),
                        interpret=bool(interpret))
     return st, arrays
 
 
 def decode_attention_bshd(st: DecodeStatics, pos_q, pos_k, sum_q, seg_q,
-                          seg_k, alibi, q, k, v, qn, kn) -> jax.Array:
+                          seg_k, alibi, q, k, v, qn, kn, ks, vs,
+                          rinv) -> jax.Array:
     """Normalised forward over prepared operands: returns o (B, s, H, Dv)."""
     b, s_len, h, d = q.shape
     cap = k.shape[1]
@@ -254,17 +337,25 @@ def decode_attention_bshd(st: DecodeStatics, pos_q, pos_k, sum_q, seg_q,
         return (bi, ki, 0, 0)
 
     one = lambda bi, hi, ki: (bi, 0, 0, 0)    # single-element placeholders
+    use_kn = st.use_nope and not st.quant
     qn_map = q_idx if st.use_nope else one
-    kn_map = one if not st.use_nope else (
+    kn_map = one if not use_kn else (
         kv_idx if kn.shape[2] == hk else kvh_idx)
     qn_spec = ((1, s_len, 1, qn.shape[-1]) if st.use_nope else (1, 1, 1, 1))
-    kn_spec = ((1, blk, 1, kn.shape[-1]) if st.use_nope else (1, 1, 1, 1))
+    kn_spec = ((1, blk, 1, kn.shape[-1]) if use_kn else (1, 1, 1, 1))
+    # quant sidecars ride the same kv-block schedule as k/v; the rope
+    # inverse-frequency row is tiny and staged whole per grid step
+    ks_map = kv_idx if st.quant else one
+    vs_map = kv_idx if st.quant else one
+    ks_spec = ((1, blk, 1, ks.shape[-1]) if st.quant else (1, 1, 1, 1))
+    vs_spec = ((1, blk, 1, 1) if st.quant else (1, 1, 1, 1))
 
     grid = (b, h, n_kv)
     out = pl.pallas_call(
         functools.partial(_kernel, n_kv=n_kv, window=st.window,
                           scale=st.scale, use_seg=st.use_seg,
-                          use_nope=st.use_nope),
+                          use_nope=st.use_nope, quant=st.quant,
+                          rope_start=st.rope_start),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, s_len), lambda bi, hi, ki: (bi, 0)),   # pos_q
@@ -278,6 +369,9 @@ def decode_attention_bshd(st: DecodeStatics, pos_q, pos_k, sum_q, seg_q,
             pl.BlockSpec((1, blk, 1, dv), kv_idx),                  # v
             pl.BlockSpec(qn_spec, qn_map),                          # qn
             pl.BlockSpec(kn_spec, kn_map),                          # kn
+            pl.BlockSpec(ks_spec, ks_map),                          # k scales
+            pl.BlockSpec(vs_spec, vs_map),                          # v scales
+            pl.BlockSpec((rinv.shape[0],), lambda bi, hi, ki: (0,)),  # rinv
         ],
         out_specs=pl.BlockSpec((1, s_len, 1, dv), q_idx),
         out_shape=jax.ShapeDtypeStruct((b, s_len, h, dv), q.dtype),
@@ -289,7 +383,8 @@ def decode_attention_bshd(st: DecodeStatics, pos_q, pos_k, sum_q, seg_q,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=st.interpret,
-    )(pos_q, pos_k, sum_q, seg_q, seg_k, alibi, q, k, v, qn, kn)
+    )(pos_q, pos_k, sum_q, seg_q, seg_k, alibi, q, k, v, qn, kn, ks, vs,
+      rinv)
     return out
 
 

@@ -32,6 +32,7 @@ from typing import Optional
 import jax
 
 from repro.kernels import default_interpret
+from repro.kernels.autotune import decode_block
 from repro.kernels.decode_attn.decode_attn import (
     decode_attention_bshd, prepare_decode_inputs)
 
@@ -39,6 +40,7 @@ from repro.kernels.decode_attn.decode_attn import (
 def decode_attention(
     q: jax.Array,                  # (B, s, H, Dqk)   RoPE'd queries
     k: jax.Array,                  # (B, cap, Hk, Dqk) read-time-RoPE'd keys
+                                   #   (int8 unroped codes when quantized)
     v: jax.Array,                  # (B, cap, Hk, Dv)
     pos_q: jax.Array,              # (B, s) int32 query positions
     pos_k: jax.Array,              # (B, cap) int32 slot positions; -1 empty
@@ -51,12 +53,31 @@ def decode_attention(
     seg_q: Optional[jax.Array] = None,      # (B, s) int32; -1 = shared
     seg_k: Optional[jax.Array] = None,      # (B, cap) int32; -1 = shared
     scale: Optional[float] = None,
-    block_size: int = 64,
+    block_size: Optional[int] = None,       # None = autotuned
     interpret: Optional[bool] = None,
+    k_scale: Optional[jax.Array] = None,    # (B, cap, Hk, G) fp32; int8 KV
+    v_scale: Optional[jax.Array] = None,    # (B, cap, Hk) fp32
+    rope_start: int = 0,                    # first roped key dim (quant)
+    rope_theta: float = 10000.0,
 ) -> jax.Array:
-    """Fused burst attention into the batched KV cache -> (B, s, H, Dv)."""
+    """Fused burst attention into the batched KV cache -> (B, s, H, Dv).
+
+    ``block_size=None`` resolves the kv tile via
+    ``repro.kernels.autotune.decode_block`` (measured winner on TPU when
+    one exists, geometry table otherwise; the historic 64 in interpret
+    mode). ``k_scale`` switches to the quantized-KV contract: ``k``/``v``
+    are raw int8 cache codes and dequant + RoPE (span ``[rope_start:]``,
+    base ``rope_theta``) happen inside the kernel — see docs/kernels.md.
+    """
     interpret = default_interpret(interpret)
+    if block_size is None:
+        block_size = decode_block(k.shape[1], dqk=q.shape[-1],
+                                  dv=v.shape[-1], interpret=interpret)
     use_nope = q_nope is not None and is_sum_q is not None
+    rope_inv = None
+    if k_scale is not None:
+        from repro.models.layers import rope_freqs
+        rope_inv = rope_freqs(q.shape[-1] - rope_start, rope_theta)
     st, arrays = prepare_decode_inputs(
         q, k, v, pos_q, pos_k, window=window,
         sum_q=is_sum_q if use_nope else None,
@@ -64,7 +85,9 @@ def decode_attention(
         q_nope=q_nope if use_nope else None,
         k_nope=k_nope if use_nope else None,
         alibi=alibi if use_nope else None,
-        scale=scale, block_size=block_size, interpret=interpret)
+        scale=scale, block_size=block_size, interpret=interpret,
+        k_scale=k_scale, v_scale=v_scale, rope_inv=rope_inv,
+        rope_start=rope_start)
     return decode_attention_bshd(st, *arrays)
 
 

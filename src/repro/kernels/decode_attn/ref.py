@@ -12,6 +12,13 @@ up a full model. Semantics:
 * rows flagged ``sum_q`` replace the RoPE scores with the NoPE stream
   minus ``alibi * distance``;
 * rows with no attendable key output exactly zero.
+
+With ``k_scale`` set the quantized-KV contract applies: ``k``/``v`` are
+raw int8 cache codes, dequantized here (per-slot/per-head scales, two
+groups split at ``rope_start`` when ``k_scale`` has a trailing axis of
+2) and the key span ``[rope_start:]`` is roped at read time from
+``max(pos_k, 0)``. The NoPE stream is the *same* codes dequantized
+without rotation, so ``k_nope`` must be None on the quant path.
 """
 from __future__ import annotations
 
@@ -21,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.windowed import NEG_INF
+from repro.models.layers import apply_rope
 
 
 def decode_attention_ref(
@@ -38,12 +46,34 @@ def decode_attention_ref(
     k_nope: Optional[jax.Array] = None,
     alibi: Optional[jax.Array] = None,
     scale: Optional[float] = None,
+    k_scale: Optional[jax.Array] = None,    # (B, cap, Hk, G) fp32
+    v_scale: Optional[jax.Array] = None,    # (B, cap, Hk) fp32
+    rope_start: int = 0,
+    rope_theta: float = 10000.0,
 ) -> jax.Array:
     b, s, h, d = q.shape
     hk = k.shape[2]
     n_rep = h // hk
     if scale is None:
         scale = d ** -0.5
+
+    if k_scale is not None:
+        assert k_nope is None, "quant path derives NoPE from the codes"
+        kf = k.astype(jnp.float32)
+        if k_scale.shape[-1] == 1:
+            sc_vec = k_scale
+        else:                      # two groups split at rope_start
+            idx = jnp.arange(d)[None, None, None, :]
+            sc_vec = jnp.where(idx < rope_start,
+                               k_scale[..., 0:1], k_scale[..., 1:2])
+        kd = kf * sc_vec           # unroped dequant == the NoPE stream
+        p = jnp.maximum(pos_k, 0)  # empty slots masked out later anyway
+        roped = apply_rope(kd[..., rope_start:], p, rope_theta)
+        k = jnp.concatenate([kd[..., :rope_start], roped], axis=-1) \
+            if rope_start else roped
+        if q_nope is not None and sum_q is not None:
+            k_nope = kd
+        v = v.astype(jnp.float32) * v_scale[..., None]
 
     def rep(t):                    # (B, cap, Hk, D) -> (B, cap, H, D)
         if n_rep == 1:

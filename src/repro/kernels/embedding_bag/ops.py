@@ -14,8 +14,18 @@ def embedding_bag(table: jax.Array, ids: jax.Array,
                   valid: Optional[jax.Array] = None, *,
                   mode: str = "sum",
                   weights: Optional[jax.Array] = None,
+                  table_scale: Optional[jax.Array] = None,
                   interpret: Optional[bool] = None) -> jax.Array:
-    """ids (B, H) -> (B, D); masked, optionally weighted, sum or mean."""
+    """ids (B, H) -> (B, D); masked, optionally weighted, sum or mean.
+
+    ``table_scale (V,)`` supports int8-quantized tables: row ``r`` of
+    ``table`` holds int8 codes that dequantize as ``codes * table_scale[r]``
+    (``repro.core.quant.quantize_q8`` over the row axis). The bag is a
+    weighted sum, so the per-row scale folds *exactly* into the gather
+    weights — ``w[b, j] *= table_scale[ids[b, j]]`` — and the kernel runs
+    unchanged on the codes cast to fp32; no dequantized table ever
+    materialises in HBM.
+    """
     interpret = default_interpret(interpret)
     b, h = ids.shape
     w = jnp.ones((b, h), jnp.float32) if weights is None \
@@ -30,8 +40,13 @@ def embedding_bag(table: jax.Array, ids: jax.Array,
         raise ValueError(f"kernel supports sum/mean, got {mode!r}")
     # masked ids may be out of range: clamp (their weight is already 0)
     ids = jnp.clip(ids, 0, table.shape[0] - 1)
+    out_dtype = table.dtype
+    if table_scale is not None:
+        w = w * table_scale.astype(jnp.float32)[ids]
+        table = table.astype(jnp.float32)
+        out_dtype = jnp.float32
     return embedding_bag_pallas(table, ids, w,
-                                interpret=interpret).astype(table.dtype)
+                                interpret=interpret).astype(out_dtype)
 
 
 __all__ = ["embedding_bag"]

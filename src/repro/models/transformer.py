@@ -59,7 +59,8 @@ class ModelConfig:
     window: int = 0                     # 0 = full causal
     attn_impl: str = "dense"            # "dense" | "blocked" | "pallas"
     attn_q_chunk: int = 4               # q-block chunking (blocked impl)
-    attn_block_size: int = 256          # pallas kernel tile (128-aligned on TPU)
+    # pallas kernel tile; None = autotuned (repro.kernels.autotune)
+    attn_block_size: Optional[int] = None
     # DTI
     dti_sum_token: bool = False         # model reserves a [SUM] token
     dti_sum_alibi: bool = True
@@ -160,20 +161,25 @@ def _layer_fwd(lp: Params, h: jax.Array, cfg: ModelConfig, kind: str, *,
                positions, window, impl, dti: Optional[DTIAttnOpts],
                valid, cache=None):
     x = rmsnorm(lp["ln_attn"], h, cfg.norm_eps)
+    if cfg.attn_block_size is not None:
+        block_size = cfg.attn_block_size
+    else:
+        from repro.kernels.autotune import train_block
+        block_size = train_block(x.shape[1], cfg.hd)
     if cfg.attn_type == "mla":
         a, new_cache = mla_attention(
             lp["attn"], x, n_heads=cfg.n_heads, qk_nope_dim=cfg.qk_nope_dim,
             qk_rope_dim=cfg.qk_rope_dim, v_head_dim=cfg.v_head_dim,
             positions=positions, window=window, rope_theta=cfg.rope_theta,
             impl=impl, q_chunk=cfg.attn_q_chunk,
-            block_size=cfg.attn_block_size, dti=dti, cache=cache,
+            block_size=block_size, dti=dti, cache=cache,
             valid=valid)
     else:
         a, new_cache = gqa_attention(
             lp["attn"], x, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
             head_dim=cfg.hd, positions=positions, window=window,
             rope_theta=cfg.rope_theta, impl=impl, q_chunk=cfg.attn_q_chunk,
-            block_size=cfg.attn_block_size, dti=dti, cache=cache,
+            block_size=block_size, dti=dti, cache=cache,
             valid=valid)
     h = h + a
     x = rmsnorm(lp["ln_ffn"], h, cfg.norm_eps)

@@ -65,8 +65,8 @@ Cache = Dict[str, Any]
 
 
 def init_lm_cache(cfg: ModelConfig, batch: int, capacity: int,
-                  *, dtype=jnp.bfloat16, page_size: int = None,
-                  n_pages: int = None) -> Cache:
+                  *, dtype=jnp.bfloat16, kv_dtype: str = None,
+                  page_size: int = None, n_pages: int = None) -> Cache:
     """Allocate a decode cache.
 
     Contiguous layout (``page_size=None``): KV tensors carry a per-row
@@ -84,8 +84,26 @@ def init_lm_cache(cfg: ModelConfig, batch: int, capacity: int,
     bookkeeping ops are layout-agnostic. Allocation/refcounting of the
     global pages is host-side state (``repro.serve.pages.PagePool``); the
     device only ever sees the page tables.
+
+    Quantized layout (``kv_dtype="int8"``): KV tensors are stored as int8
+    codes plus a small fp32 **scale sidecar** on the same slot axis —
+    ``k_scale/v_scale (L, ..., cap, Hk)`` for GQA (one symmetric absmax
+    scale per (token slot, kv head), the group RoPE rotates within),
+    ``ckv_scale/kpe_scale (L, ..., cap)`` for MLA (the latent has no head
+    axis — one scale per token slot per stream). Keeping the scales
+    slot-resident rather than literally per-page means incremental
+    chunked writes never requantize a neighbour token, and — because the
+    sidecar rides the same global slot axis as the codes — a page *is*
+    self-describing: adoption, steals and LRU eviction move codes and
+    scales together with zero extra bookkeeping (the scale-invariance
+    property tests/test_kv_quant.py pins). ``dtype`` is ignored for the
+    KV tensors when ``kv_dtype`` is set; dequantization happens at read
+    time (dense path) or inside the decode kernel (pallas path).
     """
     l = cfg.n_layers
+    assert kv_dtype in (None, "int8"), f"unsupported kv_dtype {kv_dtype!r}"
+    quant = kv_dtype == "int8"
+    kv_store = jnp.int8 if quant else dtype
     if page_size is not None:
         assert capacity % page_size == 0, (
             f"paged capacity {capacity} must be a multiple of "
@@ -96,15 +114,27 @@ def init_lm_cache(cfg: ModelConfig, batch: int, capacity: int,
         kv_rows, kv_cap = batch, capacity
     if cfg.attn_type == "mla":
         tensors = {
-            "ckv": jnp.zeros((l, kv_rows, kv_cap, cfg.kv_lora_rank), dtype),
-            "kpe": jnp.zeros((l, kv_rows, kv_cap, cfg.qk_rope_dim), dtype),
+            "ckv": jnp.zeros((l, kv_rows, kv_cap, cfg.kv_lora_rank),
+                             kv_store),
+            "kpe": jnp.zeros((l, kv_rows, kv_cap, cfg.qk_rope_dim),
+                             kv_store),
         }
+        if quant:
+            tensors["ckv_scale"] = jnp.zeros((l, kv_rows, kv_cap),
+                                             jnp.float32)
+            tensors["kpe_scale"] = jnp.zeros((l, kv_rows, kv_cap),
+                                             jnp.float32)
     else:
         hk, dk = cfg.n_kv_heads, cfg.hd
         tensors = {
-            "k": jnp.zeros((l, kv_rows, kv_cap, hk, dk), dtype),
-            "v": jnp.zeros((l, kv_rows, kv_cap, hk, dk), dtype),
+            "k": jnp.zeros((l, kv_rows, kv_cap, hk, dk), kv_store),
+            "v": jnp.zeros((l, kv_rows, kv_cap, hk, dk), kv_store),
         }
+        if quant:
+            tensors["k_scale"] = jnp.zeros((l, kv_rows, kv_cap, hk),
+                                           jnp.float32)
+            tensors["v_scale"] = jnp.zeros((l, kv_rows, kv_cap, hk),
+                                           jnp.float32)
     if page_size is not None:
         tensors = {k: v[:, 0] for k, v in tensors.items()}   # (L, n_tot, ...)
         tensors["page_table"] = jnp.full((batch, capacity // page_size), -1,
@@ -118,6 +148,49 @@ def init_lm_cache(cfg: ModelConfig, batch: int, capacity: int,
 def is_paged(cache: Cache) -> bool:
     """True when the cache uses the global page-pool layout."""
     return "page_table" in cache
+
+
+#: Bookkeeping keys present in every cache layout; everything else in the
+#: dict is a per-layer KV tensor (codes or scale sidecar).
+BOOK_KEYS = ("pos", "cursor", "ref", "page_table")
+
+
+def kv_keys(cache: Cache):
+    """The per-layer KV tensor keys of ``cache`` (codes + scale sidecars),
+    in a deterministic order — the order the decode step's scan carry
+    threads them."""
+    return tuple(k for k in ("k", "v", "k_scale", "v_scale",
+                             "ckv", "kpe", "ckv_scale", "kpe_scale")
+                 if k in cache)
+
+
+def is_quantized(cache: Cache) -> bool:
+    """True when KV is stored as int8 codes + fp32 scale sidecar."""
+    return "k_scale" in cache or "ckv_scale" in cache
+
+
+def kv_cache_bytes(cache: Cache) -> int:
+    """Total bytes of the KV tensors (codes + scale sidecar; bookkeeping
+    arrays excluded) — works on concrete caches and ``cache_shape`` specs."""
+    total = 0
+    for key in kv_keys(cache):
+        t = cache[key]
+        n = 1
+        for d in t.shape:
+            n *= d
+        total += n * jnp.dtype(t.dtype).itemsize
+    return int(total)
+
+
+def kv_token_bytes(cache: Cache) -> float:
+    """KV bytes per token slot, summed over layers (codes + scales): the
+    per-token cost a pool budget buys — ``serve_bench`` sizes its
+    equal-byte quantized-vs-bf16 pools with this."""
+    ref = cache["ckv"] if "ckv" in cache else cache["k"]
+    n_slots = ref.shape[1]          # global slot axis (paged) or B... cap
+    if not is_paged(cache):
+        n_slots = ref.shape[1] * ref.shape[2]
+    return kv_cache_bytes(cache) / n_slots
 
 
 def page_size_of(cache: Cache) -> int:
@@ -145,12 +218,13 @@ def physical_slots(cache: Cache):
 
 
 def cache_shape(cfg: ModelConfig, batch: int, capacity: int,
-                *, dtype=jnp.bfloat16, page_size: int = None,
-                n_pages: int = None) -> Dict[str, tuple]:
+                *, dtype=jnp.bfloat16, kv_dtype: str = None,
+                page_size: int = None, n_pages: int = None) -> Dict[str, tuple]:
     """Shapes/dtypes without allocation (dry-run input specs)."""
     import jax
     return jax.eval_shape(lambda: init_lm_cache(cfg, batch, capacity,
                                                 dtype=dtype,
+                                                kv_dtype=kv_dtype,
                                                 page_size=page_size,
                                                 n_pages=n_pages))
 
@@ -261,4 +335,6 @@ def adopt_slots(cache: Cache, mask, length) -> Cache:
 
 __all__ = ["Cache", "init_lm_cache", "cache_shape", "slot_indices",
            "retain_slots", "free_slots", "trim_slots", "adopt_slots",
-           "is_paged", "page_size_of", "physical_slots"]
+           "is_paged", "page_size_of", "physical_slots",
+           "is_quantized", "kv_keys", "kv_cache_bytes", "kv_token_bytes",
+           "BOOK_KEYS"]

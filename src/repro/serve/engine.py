@@ -45,12 +45,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.losses import ctr_logits
+from repro.core.quant import dequantize_q8, quantize_q8
 from repro.core.windowed import NEG_INF
 from repro.kernels.decode_attn.ops import decode_attention
 from repro.models.layers import alibi_slopes, apply_rope, dense, rmsnorm
 from repro.models.moe import moe_ffn
 from repro.models.transformer import ModelConfig, forward
-from repro.serve.cache import Cache, is_paged, physical_slots, slot_indices
+from repro.serve.cache import (Cache, is_paged, kv_keys, physical_slots,
+                               slot_indices)
 
 Params = Dict[str, Any]
 
@@ -181,30 +183,67 @@ def _decode_attend(scores_rope, scores_nope, alibi, d, mask, is_sum_q, v_agg):
     return v_agg(jnp.where(any_ok, probs, 0.0))
 
 
-def _gqa_decode_layer(lp: Params, h, kc, vc, *, cfg: ModelConfig, slots,
+def _gqa_decode_layer(lp: Params, h, kv: Params, *, cfg: ModelConfig, slots,
                       pos_buf, positions, is_sum, window, kind,
                       seg_q=None, seg_buf=None, impl="dense",
-                      block_size=64, interpret=None,
+                      block_size=None, interpret=None,
                       write_idx=None, read_idx=None):
     b, s, _ = h.shape
     hq, hk, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     n_rep = hq // hk
+    quant = "k_scale" in kv
     x = rmsnorm(lp["ln_attn"], h, cfg.norm_eps)
     q = dense(lp["attn"]["q"], x).reshape(b, s, hq, hd)
     k_new = dense(lp["attn"]["k"], x).reshape(b, s, hk, hd)
     v_new = dense(lp["attn"]["v"], x).reshape(b, s, hk, hd)
 
     bidx = jnp.arange(b)[:, None]
+    kv = dict(kv)
     # mode="drop": padded-to-bucket chunks may point past capacity; those
     # writes must vanish, not clamp onto the last slot (see decode docstring)
-    kc = _cache_write(kc, slots, k_new, bidx=bidx, write_idx=write_idx)
-    vc = _cache_write(vc, slots, v_new, bidx=bidx, write_idx=write_idx)
-    k_raw = _cache_view(kc, read_idx)
-    v_raw = _cache_view(vc, read_idx)
+    if quant:
+        # quantize-on-write: int8 codes and their per-(slot, head) scales
+        # land on the same slots in one step, so pages stay self-describing
+        k_new, k_sv = quantize_q8(k_new)
+        v_new, v_sv = quantize_q8(v_new)
+        kv["k_scale"] = _cache_write(kv["k_scale"], slots, k_sv,
+                                     bidx=bidx, write_idx=write_idx)
+        kv["v_scale"] = _cache_write(kv["v_scale"], slots, v_sv,
+                                     bidx=bidx, write_idx=write_idx)
+    kv["k"] = _cache_write(kv["k"], slots, k_new, bidx=bidx,
+                           write_idx=write_idx)
+    kv["v"] = _cache_write(kv["v"], slots, v_new, bidx=bidx,
+                           write_idx=write_idx)
+    k_raw = _cache_view(kv["k"], read_idx)
+    v_raw = _cache_view(kv["v"], read_idx)
 
     q_rope = apply_rope(q, positions, cfg.rope_theta)
-    k_rope = _rope_read(k_raw, pos_buf, cfg.rope_theta)
     scale = hd ** -0.5
+    nope = cfg.dti_sum_alibi
+
+    if impl == "pallas" and quant:
+        # quantized-KV contract: hand the kernel the raw int8 codes plus
+        # scale sidecars; dequant + read-time RoPE happen in VMEM, and the
+        # NoPE stream is the same codes dequantized without rotation
+        out = decode_attention(
+            q_rope, k_raw, v_raw, positions, pos_buf, window=window,
+            is_sum_q=is_sum if nope else None,
+            q_nope=q if nope else None, k_nope=None,
+            alibi=alibi_slopes(hq) if nope else None,
+            seg_q=seg_q, seg_k=seg_buf, scale=scale,
+            block_size=block_size, interpret=interpret,
+            k_scale=_cache_view(kv["k_scale"], read_idx)[..., None],
+            v_scale=_cache_view(kv["v_scale"], read_idx),
+            rope_start=0, rope_theta=cfg.rope_theta).astype(h.dtype)
+        h = h + dense(lp["attn"]["o"], out.reshape(b, s, hq * hd))
+        h, aux = _ffn(lp, h, cfg, kind)
+        return h, kv, aux
+
+    if quant:
+        # dense oracle path: dequantize the row-major views up front
+        k_raw = dequantize_q8(k_raw, _cache_view(kv["k_scale"], read_idx))
+        v_raw = dequantize_q8(v_raw, _cache_view(kv["v_scale"], read_idx))
+    k_rope = _rope_read(k_raw, pos_buf, cfg.rope_theta)
 
     if impl == "pallas":
         # fused burst attention into the cache: the kernel reads the
@@ -212,7 +251,6 @@ def _gqa_decode_layer(lp: Params, h, kc, vc, *, cfg: ModelConfig, slots,
         # page-index gather) via index maps, applies every mask term via
         # index arithmetic and keeps the softmax online — no (B,H,s,cap)
         # score/prob tensors, empty cache blocks skipped
-        nope = cfg.dti_sum_alibi
         out = decode_attention(
             q_rope, k_rope, v_raw, positions, pos_buf, window=window,
             is_sum_q=is_sum if nope else None,
@@ -222,7 +260,7 @@ def _gqa_decode_layer(lp: Params, h, kc, vc, *, cfg: ModelConfig, slots,
             block_size=block_size, interpret=interpret).astype(h.dtype)
         h = h + dense(lp["attn"]["o"], out.reshape(b, s, hq * hd))
         h, aux = _ffn(lp, h, cfg, kind)
-        return h, kc, vc, aux
+        return h, kv, aux
 
     def rep(t):  # (B, cap, Hk, D) -> (B, cap, Hq, D)
         if n_rep == 1:
@@ -246,18 +284,19 @@ def _gqa_decode_layer(lp: Params, h, kc, vc, *, cfg: ModelConfig, slots,
                                               p.astype(h.dtype), rep(v_raw)))
     h = h + dense(lp["attn"]["o"], out.reshape(b, s, hq * hd))
     h, aux = _ffn(lp, h, cfg, kind)
-    return h, kc, vc, aux
+    return h, kv, aux
 
 
-def _mla_decode_layer(lp: Params, h, ckv_c, kpe_c, *, cfg: ModelConfig,
+def _mla_decode_layer(lp: Params, h, kv: Params, *, cfg: ModelConfig,
                       slots, pos_buf, positions, is_sum, window, kind,
                       seg_q=None, seg_buf=None, impl="dense",
-                      block_size=64, interpret=None,
+                      block_size=None, interpret=None,
                       write_idx=None, read_idx=None):
     """Absorbed-MLA decode: scores and values against the latent cache."""
     b, s, _ = h.shape
     hq = cfg.n_heads
     dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    quant = "ckv_scale" in kv
     ap = lp["attn"]
     x = rmsnorm(lp["ln_attn"], h, cfg.norm_eps)
 
@@ -274,20 +313,62 @@ def _mla_decode_layer(lp: Params, h, ckv_c, kpe_c, *, cfg: ModelConfig,
     kpe_new = dense(ap["k_rope"], x)                                # (B,s,dr)
 
     bidx = jnp.arange(b)[:, None]
-    ckv_c = _cache_write(ckv_c, slots, c_new, bidx=bidx, write_idx=write_idx)
-    kpe_c = _cache_write(kpe_c, slots, kpe_new, bidx=bidx,
-                         write_idx=write_idx)
-    ckv_v = _cache_view(ckv_c, read_idx)
-    kpe_v = _cache_view(kpe_c, read_idx)
+    kv = dict(kv)
+    if quant:
+        # latent and rope streams quantize separately: per-token scales,
+        # written on the same slots as their codes (self-describing pages)
+        c_new, c_sv = quantize_q8(c_new)
+        kpe_new, p_sv = quantize_q8(kpe_new)
+        kv["ckv_scale"] = _cache_write(kv["ckv_scale"], slots, c_sv,
+                                       bidx=bidx, write_idx=write_idx)
+        kv["kpe_scale"] = _cache_write(kv["kpe_scale"], slots, p_sv,
+                                       bidx=bidx, write_idx=write_idx)
+    kv["ckv"] = _cache_write(kv["ckv"], slots, c_new, bidx=bidx,
+                             write_idx=write_idx)
+    kv["kpe"] = _cache_write(kv["kpe"], slots, kpe_new, bidx=bidx,
+                             write_idx=write_idx)
+    ckv_v = _cache_view(kv["ckv"], read_idx)
+    kpe_v = _cache_view(kv["kpe"], read_idx)
 
     # absorb W_UK into the query, W_UV into the output
     w_up = ap["kv_up"]["w"].reshape(cfg.kv_lora_rank, hq, dn + dv)
     w_uk, w_uv = w_up[..., :dn], w_up[..., dn:]
     q_abs = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)              # (B,s,H,r)
 
+    scale = (dn + dr) ** -0.5
+    nope = cfg.dti_sum_alibi
+
+    if quant:
+        c_sv_view = _cache_view(kv["ckv_scale"], read_idx)          # (B,cap)
+        p_sv_view = _cache_view(kv["kpe_scale"], read_idx)
+        if impl == "pallas":
+            # quantized MQA form: concatenated int8 codes with a 2-group
+            # scale row split at rope_start = r_kv (latent | rope stream);
+            # the kernel dequantizes and ropes the kpe tail in VMEM
+            q_eff = jnp.concatenate([q_abs, q_pe_rope], axis=-1)
+            k_codes = jnp.concatenate([ckv_v, kpe_v], axis=-1)[:, :, None, :]
+            k_sc = jnp.stack([c_sv_view, p_sv_view],
+                             axis=-1)[:, :, None, :]                # (B,cap,1,2)
+            qn_eff = (jnp.concatenate([q_abs, q_pe], axis=-1)
+                      if nope else None)
+            o_lat = decode_attention(
+                q_eff, k_codes, ckv_v[:, :, None, :], positions, pos_buf,
+                window=window, is_sum_q=is_sum if nope else None,
+                q_nope=qn_eff, k_nope=None,
+                alibi=alibi_slopes(hq) if nope else None,
+                seg_q=seg_q, seg_k=seg_buf, scale=scale,
+                block_size=block_size, interpret=interpret,
+                k_scale=k_sc, v_scale=c_sv_view[:, :, None],
+                rope_start=cfg.kv_lora_rank, rope_theta=cfg.rope_theta)
+            out = jnp.einsum("bshr,rhd->bshd", o_lat.astype(h.dtype), w_uv)
+            h = h + dense(ap["o"], out.reshape(b, s, hq * dv))
+            h, aux = _ffn(lp, h, cfg, kind)
+            return h, kv, aux
+        ckv_v = dequantize_q8(ckv_v, c_sv_view)
+        kpe_v = dequantize_q8(kpe_v, p_sv_view)
+
     kpe_rope = _rope_read(kpe_v[:, :, None, :], pos_buf,
                           cfg.rope_theta)[:, :, 0, :]               # (B,cap,dr)
-    scale = (dn + dr) ** -0.5
 
     if impl == "pallas":
         # absorbed MLA as MQA for the fused kernel (Hk=1): concatenate the
@@ -296,7 +377,6 @@ def _mla_decode_layer(lp: Params, h, ckv_c, kpe_c, *, cfg: ModelConfig,
         # values in the latent (Dv = r_kv != Dqk); W_UV folds after.
         q_eff = jnp.concatenate([q_abs, q_pe_rope], axis=-1)
         k_eff = jnp.concatenate([ckv_v, kpe_rope], axis=-1)[:, :, None, :]
-        nope = cfg.dti_sum_alibi
         qn_eff = (jnp.concatenate([q_abs, q_pe], axis=-1) if nope else None)
         kn_eff = (jnp.concatenate([ckv_v, kpe_v], axis=-1)[:, :, None, :]
                   if nope else None)
@@ -310,7 +390,7 @@ def _mla_decode_layer(lp: Params, h, ckv_c, kpe_c, *, cfg: ModelConfig,
         out = jnp.einsum("bshr,rhd->bshd", o_lat.astype(h.dtype), w_uv)
         h = h + dense(ap["o"], out.reshape(b, s, hq * dv))
         h, aux = _ffn(lp, h, cfg, kind)
-        return h, ckv_c, kpe_c, aux
+        return h, kv, aux
 
     sc_rope = (jnp.einsum("bshr,bkr->bhsk", q_abs, ckv_v,
                           preferred_element_type=jnp.float32)
@@ -335,7 +415,7 @@ def _mla_decode_layer(lp: Params, h, ckv_c, kpe_c, *, cfg: ModelConfig,
                          v_agg)
     h = h + dense(ap["o"], out.reshape(b, s, hq * dv))
     h, aux = _ffn(lp, h, cfg, kind)
-    return h, ckv_c, kpe_c, aux
+    return h, kv, aux
 
 
 def _ffn(lp: Params, h, cfg: ModelConfig, kind: str):
@@ -353,7 +433,7 @@ def _ffn(lp: Params, h, cfg: ModelConfig, kind: str):
 def make_decode_fn(cfg: ModelConfig, *, window: int, ring: bool,
                    yes_id: int = 3, no_id: int = 4,
                    attn_impl: Optional[str] = None,
-                   block_size: int = 64,
+                   block_size: Optional[int] = None,
                    interpret: Optional[bool] = None) -> Callable:
     """(params, cache, tokens (B,s), positions (B,s), is_sum (B,s)[,
     valid (B,s), commit (B,), seg (B,s)]) -> (p_click (B, s), new_cache).
@@ -373,7 +453,14 @@ def make_decode_fn(cfg: ModelConfig, *, window: int, ring: bool,
       (so a config that trains on the kernel path serves on it too).
 
     ``block_size``/``interpret`` tune the kernel path only (interpret
-    auto-resolves off-TPU, see ``repro.kernels.default_interpret``).
+    auto-resolves off-TPU, see ``repro.kernels.default_interpret``;
+    ``block_size=None`` defers to ``repro.kernels.autotune.decode_block``).
+
+    Quantized caches (``init_lm_cache(kv_dtype="int8")``) are detected from
+    the cache structure: layers quantize KV on write (codes + scale
+    sidecars land on the same slots), the dense path dequantizes the
+    row-major view up front, and the Pallas path hands the kernel raw int8
+    codes with their scales so dequant happens in VMEM (docs/kernels.md).
 
     The three optional operands are what the continuous-batching scheduler
     (repro.serve.scheduler) runs on:
@@ -405,7 +492,6 @@ def make_decode_fn(cfg: ModelConfig, *, window: int, ring: bool,
     (tests/test_paged_cache.py). Paged requires ``ring=False``.
     """
     mla = cfg.attn_type == "mla"
-    keys = ("ckv", "kpe") if mla else ("k", "v")
     layer_fn = _mla_decode_layer if mla else _gqa_decode_layer
     if attn_impl is None:
         attn_impl = "pallas" if cfg.attn_impl == "pallas" else "dense"
@@ -467,41 +553,42 @@ def make_decode_fn(cfg: ModelConfig, *, window: int, ring: bool,
         # updated per layer with dynamic_update_index_in_dim: XLA keeps
         # while-loop carries in place, so the donated cache is mutated with
         # no xs/ys double buffer (which would cost a full extra cache).
-        def run_group(h, ca_all, cb_all, group: Params, kind: str, lo: int):
+        # The carry is a tuple over kv_keys(cache) — codes plus any
+        # quantization-scale sidecars — so int8 caches thread their scales
+        # through the scan without a second code path.
+        kv_names = kv_keys(cache)
+
+        def run_group(h, kv_all, group: Params, kind: str, lo: int):
             n = jax.tree_util.tree_leaves(group)[0].shape[0]
 
             def body(carry, xs):
-                hc, ca_full, cb_full = carry
+                hc, full = carry
                 lp, li = xs
-                ca = jax.lax.dynamic_index_in_dim(ca_full, li, 0,
-                                                  keepdims=False)
-                cb = jax.lax.dynamic_index_in_dim(cb_full, li, 0,
-                                                  keepdims=False)
-                hh, ca, cb, aux = layer_fn(
-                    lp, hc, ca, cb, cfg=cfg, slots=slots, pos_buf=pos_buf,
+                layer_kv = {nm: jax.lax.dynamic_index_in_dim(
+                    t, li, 0, keepdims=False)
+                    for nm, t in zip(kv_names, full)}
+                hh, layer_kv, aux = layer_fn(
+                    lp, hc, layer_kv, cfg=cfg, slots=slots, pos_buf=pos_buf,
                     positions=positions, is_sum=is_sum, window=window,
                     kind=kind, seg_q=seg, seg_buf=seg_buf, impl=attn_impl,
                     block_size=block_size, interpret=interpret,
                     write_idx=write_idx, read_idx=read_idx)
-                ca_full = jax.lax.dynamic_update_index_in_dim(
-                    ca_full, ca.astype(ca_full.dtype), li, 0)
-                cb_full = jax.lax.dynamic_update_index_in_dim(
-                    cb_full, cb.astype(cb_full.dtype), li, 0)
-                return (hh, ca_full, cb_full), None
+                full = tuple(jax.lax.dynamic_update_index_in_dim(
+                    t, layer_kv[nm].astype(t.dtype), li, 0)
+                    for nm, t in zip(kv_names, full))
+                return (hh, full), None
 
             idx = lo + jnp.arange(n, dtype=jnp.int32)
-            (h, ca_all, cb_all), _ = jax.lax.scan(
-                body, (h, ca_all, cb_all), (group, idx))
-            return h, ca_all, cb_all
+            (h, kv_all), _ = jax.lax.scan(body, (h, kv_all), (group, idx))
+            return h, kv_all
 
-        ca_all, cb_all = cache[keys[0]], cache[keys[1]]
+        kv_all = tuple(cache[nm] for nm in kv_names)
         if "prefix" in params:
-            h, ca_all, cb_all = run_group(h, ca_all, cb_all,
-                                          params["prefix"], "dense", 0)
-        h, ca_all, cb_all = run_group(h, ca_all, cb_all, params["stack"],
-                                      "moe" if cfg.moe else "dense",
-                                      n_prefix)
-        new_cache[keys[0]], new_cache[keys[1]] = ca_all, cb_all
+            h, kv_all = run_group(h, kv_all, params["prefix"], "dense", 0)
+        h, kv_all = run_group(h, kv_all, params["stack"],
+                              "moe" if cfg.moe else "dense", n_prefix)
+        for nm, t in zip(kv_names, kv_all):
+            new_cache[nm] = t
 
         h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
         logits2 = ctr_logits(params, cfg, h, yes_id, no_id)

@@ -33,12 +33,25 @@ import numpy as np
 
 
 class PagePool:
-    """Fixed-size page allocator: free list + per-page refcounts."""
+    """Fixed-size page allocator: free list + per-page refcounts.
 
-    def __init__(self, n_pages: int, page_size: int):
+    ``token_bytes`` is the KV cost of one token slot (codes + any
+    quantization scale sidecar, summed over layers —
+    ``repro.serve.cache.kv_token_bytes``); the scheduler stamps it at
+    construction so capacity questions have one answer in tokens
+    (``capacity_tokens``) and one in bytes (``pool_bytes``). With int8 KV
+    the sidecar is part of a page's footprint — a page moves with its
+    scales — so the byte accounting stays honest across dtypes, which is
+    what lets benchmarks size quantized and bf16 pools to *equal bytes*
+    rather than equal page counts.
+    """
+
+    def __init__(self, n_pages: int, page_size: int,
+                 *, token_bytes: float = 0.0):
         assert n_pages > 0 and page_size > 0
         self.n_pages = int(n_pages)
         self.page_size = int(page_size)
+        self.token_bytes = float(token_bytes)
         self.ref = np.zeros(self.n_pages, np.int32)
         # stack: pop() hands out low page ids first
         self._free: List[int] = list(range(self.n_pages - 1, -1, -1))
@@ -50,6 +63,15 @@ class PagePool:
 
     def pages_in_use(self) -> int:
         return self.n_pages - len(self._free)
+
+    def capacity_tokens(self) -> int:
+        """Total token slots the pool can hold across all rows."""
+        return self.n_pages * self.page_size
+
+    def pool_bytes(self) -> int:
+        """Total KV bytes backing the pool (0 when ``token_bytes`` was
+        never stamped)."""
+        return int(self.capacity_tokens() * self.token_bytes)
 
     def alloc(self, n: int) -> Optional[List[int]]:
         """Hand out ``n`` pages with ``ref = 1`` each, or ``None`` (and no

@@ -86,7 +86,8 @@ from repro.core.dti import SpecialTokens
 from repro.data.requests import RadixTree
 from repro.models.transformer import ModelConfig
 from repro.serve.cache import (adopt_slots, free_slots, init_lm_cache,
-                               retain_slots, trim_slots)
+                               kv_cache_bytes, kv_token_bytes, retain_slots,
+                               trim_slots)
 from repro.serve.engine import make_decode_fn
 from repro.serve.pages import PagePool
 
@@ -246,6 +247,7 @@ class ServeScheduler:
                  buckets: Sequence[int] = (8, 16, 32, 64),
                  sp: SpecialTokens = SpecialTokens(),
                  yes_id: int = 3, no_id: int = 4, cache_dtype=jnp.float32,
+                 kv_dtype: Optional[str] = None,
                  attn_impl: Optional[str] = None,
                  share_prefix: bool = True, min_shared_prefix: int = 4,
                  prefill_budget: Optional[int] = None,
@@ -260,6 +262,7 @@ class ServeScheduler:
         self.cfg = cfg
         self.n_slots = n_slots
         self.capacity = capacity
+        self.kv_dtype = kv_dtype
         self.buckets = tuple(sorted(buckets))
         self.sp = sp
         self.attn_impl = attn_impl
@@ -309,9 +312,15 @@ class ServeScheduler:
                              donate_argnums=(0,))
         self._adopt = jax.jit(adopt_slots, donate_argnums=(0,))
         self.cache = init_lm_cache(
-            cfg, n_slots, cap_eff, dtype=cache_dtype,
+            cfg, n_slots, cap_eff, dtype=cache_dtype, kv_dtype=kv_dtype,
             page_size=self.page_size,
             n_pages=n_pages if self.paged else None)
+        # per-token KV footprint (codes + scale sidecars, all layers):
+        # stamped on the pool so capacity can be asked in bytes — what lets
+        # benchmarks size int8 and bf16 pools to equal HBM budgets
+        self._kv_token_bytes = kv_token_bytes(self.cache)
+        if self.paged:
+            self._pool.token_bytes = self._kv_token_bytes
         self._queue: deque = deque()
         self._rows: List[_Row] = [_Row() for _ in range(n_slots)]
         self._trie = RadixTree(page_size=self.page_size or 0)
@@ -352,6 +361,7 @@ class ServeScheduler:
         self._qdepth_n = 0
         self._budget_used = 0
         self._budget_avail = 0
+        self._kv_bytes_committed = 0     # bytes of KV landed by commits
         self._starved_steps = 0
         self._prefill_steps = 0          # steps that dispatched >=1 commit
         self._ctx_tokens_done = 0        # finished requests' context tokens
@@ -413,6 +423,13 @@ class ServeScheduler:
             "prefix_hit_rate": (self._shared_tokens_done
                                 / self._ctx_tokens_done
                                 if self._ctx_tokens_done else 0.0),
+            # KV footprint: dtype, whole-cache bytes, per-token bytes
+            # (codes + any scale sidecar) and bytes landed by commits —
+            # the equal-HBM-budget axis of the quantized-vs-bf16 benches
+            "kv_dtype": self.kv_dtype or "native",
+            "kv_bytes": int(kv_cache_bytes(self.cache)),
+            "kv_token_bytes": float(self._kv_token_bytes),
+            "kv_bytes_committed": int(self._kv_bytes_committed),
         }
         if self.paged:
             out.update({
@@ -421,6 +438,8 @@ class ServeScheduler:
                 "pages_free": int(self._pool.free_count()),
                 "page_evictions": int(self._pool.evictions),
                 "radix_pages": int(self._trie.held_pages()),
+                "pool_capacity_tokens": int(self._pool.capacity_tokens()),
+                "pool_bytes": int(self._pool.pool_bytes()),
             })
         return out
 
@@ -1172,6 +1191,7 @@ class ServeScheduler:
                 self._rows[i].pending_commit -= 1
         if pending:
             self._budget_used += used
+            self._kv_bytes_committed += int(used * self._kv_token_bytes)
             if budget is not None:
                 self._budget_avail += min(cap0, demand)
                 if starved:

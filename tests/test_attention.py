@@ -143,6 +143,7 @@ class TestSemantics:
         np.testing.assert_allclose(o1[0, keep], o2[0, keep], atol=1e-6)
         assert float(jnp.max(jnp.abs(o1[0, 20] - o2[0, 20]))) > 1e-4
 
+    @pytest.mark.hyp
     @given(st.integers(1, 6))
     @settings(max_examples=6, deadline=None)
     def test_reset_pulls_toward_v0(self, seed):

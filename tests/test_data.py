@@ -23,6 +23,7 @@ class TestTokenizer:
         assert ids[0] == ids[3] and ids[1] == ids[4]
         assert all(tok.sp.n_reserved <= i < 2048 for i in ids)
 
+    @pytest.mark.hyp
     @given(st.text(alphabet=st.characters(codec="ascii",
                                           categories=["L", "N"]),
                    min_size=1, max_size=12))
@@ -204,6 +205,7 @@ class TestSparseEmbedding:
         np.testing.assert_array_equal(np.asarray(embedding_lookup(table, ids)),
                                       np.asarray(table[jnp.asarray([3, 7])]))
 
+    @pytest.mark.hyp
     @given(st.integers(0, 2**31 - 1))
     @settings(max_examples=40, deadline=None)
     def test_hash_bucket_in_range(self, x):

@@ -108,6 +108,7 @@ class TestMaskAndReset:
         assert m[3, 3]                       # SUM attends itself
         assert not m[4:, 3].any()            # nobody else attends the SUM
 
+    @pytest.mark.hyp
     @given(st.integers(0, 2000))
     @settings(max_examples=30, deadline=None)
     def test_reset_alpha_bounds(self, d):
@@ -146,6 +147,7 @@ class TestEq3:
         assert abs(flops_reduction_exact(10**7, n, k, N, K)
                    - flops_reduction_approx(N, K, k)) < 0.01
 
+    @pytest.mark.hyp
     @given(st.integers(2, 60))
     @settings(max_examples=20, deadline=None)
     def test_reduction_increases_with_k(self, k):
@@ -169,6 +171,7 @@ class TestMetrics:
         s = np.array([.3, .3, .1, .9])
         assert abs(auc(y, s) - 0.875) < 1e-9
 
+    @pytest.mark.hyp
     @given(st.lists(st.tuples(st.integers(0, 1),
                               st.floats(0.01, 0.99)), min_size=6,
                     max_size=60))

@@ -257,6 +257,7 @@ class TestLeakageUnderGrad:
         _leakage_case([5, 17], window=4, seed=1, with_sum=False,
                       target_seg=0)
 
+    @pytest.mark.hyp
     @settings(max_examples=8, deadline=None)
     @given(st.lists(st.integers(min_value=2, max_value=12), min_size=2,
                     max_size=4),

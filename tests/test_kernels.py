@@ -93,3 +93,23 @@ class TestEmbeddingBagKernel:
         ids = jnp.asarray(rng.integers(0, 10, (2, 4)), jnp.int32)
         valid = jnp.zeros((2, 4), bool)
         np.testing.assert_allclose(embedding_bag(table, ids, valid), 0.0)
+
+    @pytest.mark.parametrize("mode", ["sum", "mean"])
+    def test_int8_table_scale_fold_is_exact(self, mode, rng):
+        """A per-row-quantized table folds its scales into the gather
+        weights *exactly* (the bag is a weighted sum), so the int8 path
+        must match the reference bag over the dequantized table to fp32
+        reduction noise — no quantization tolerance in sight."""
+        from repro.core.quant import dequantize_q8, quantize_q8
+        V, D, B, H = 200, 16, 8, 6
+        table = jnp.asarray(rng.normal(0, 3.0, (V, D)), jnp.float32)
+        codes, scale = quantize_q8(table)          # per-row scales (V,)
+        ids = jnp.asarray(rng.integers(0, V, (B, H)), jnp.int32)
+        valid = jnp.asarray(rng.random((B, H)) < 0.8)
+        o_ref = reference_embedding_bag(dequantize_q8(codes, scale),
+                                        ids, valid, mode=mode)
+        o_q = embedding_bag(codes, ids, valid, mode=mode,
+                            table_scale=scale)
+        assert o_q.dtype == jnp.float32
+        np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_q),
+                                   atol=1e-5, rtol=1e-5)

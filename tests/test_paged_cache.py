@@ -295,6 +295,34 @@ def test_page_pool_pressure_evicts_lru_index_pages():
 # bookkeeping bugfix sweep: regressions with named failures
 # ---------------------------------------------------------------------------
 
+def test_reset_telemetry_clears_kv_bytes_and_evictions_together():
+    """Satellite regression: the quantized-KV telemetry (kv_bytes
+    committed this window) and the pool's eviction counter are reset by
+    the same reset_telemetry call — a partial reset would make the
+    bytes-per-eviction trend lie across bench windows. Static capacity
+    figures (pool bytes, per-token bytes) survive the reset."""
+    cfg = _cfg()
+    params = init_params(jax.random.PRNGKey(7), cfg)
+    s = ServeScheduler(params, cfg, n_slots=2, capacity=64, buckets=(8, 16),
+                       kv_dtype="int8", paged=True, page_size=8, n_pages=10)
+    for t in range(5):
+        s.submit([[40 + t] * 20], [[31]])
+    s.run()
+    tel = s.telemetry()
+    assert tel["kv_dtype"] == "int8"
+    assert tel["kv_bytes_committed"] > 0
+    assert tel["page_evictions"] > 0
+    assert tel["pool_bytes"] == 10 * 8 * tel["kv_token_bytes"]
+    s.reset_telemetry()
+    tel = s.telemetry()
+    assert tel["kv_bytes_committed"] == 0
+    assert tel["page_evictions"] == 0
+    assert s._pool.evictions == 0
+    # capacity facts are properties of the cache, not the window
+    assert tel["pool_capacity_tokens"] == 80
+    assert tel["kv_token_bytes"] > 0 and tel["kv_bytes"] > 0
+
+
 def test_double_free_detection_names_row_and_rids():
     """Satellite regression: over-freeing a row's refcount used to
     saturate silently on device (resetting pos/cursor under an active

@@ -121,6 +121,7 @@ _ops = st.lists(
     min_size=1, max_size=60)
 
 
+@pytest.mark.hyp
 @settings(max_examples=200, deadline=None)
 @given(_ops)
 def test_radix_matches_bruteforce_and_trie(ops):
@@ -218,6 +219,7 @@ _page_ops = st.lists(
     min_size=1, max_size=40)
 
 
+@pytest.mark.hyp
 @settings(max_examples=150, deadline=None)
 @given(_page_ops)
 def test_page_layer_matches_flat_oracle(ops):

@@ -63,6 +63,7 @@ class TestOptimizer:
                                    state, params)
         assert float(stats["grad_norm"]) > 100     # reported pre-clip
 
+    @pytest.mark.hyp
     @given(st.lists(st.floats(-100, 100), min_size=2, max_size=40))
     @settings(max_examples=30, deadline=None)
     def test_int8_roundtrip_error_bound(self, xs):
