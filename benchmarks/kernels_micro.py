@@ -136,21 +136,32 @@ def autotune_sweep():
     """Report what the block-size autotuner resolves (and, on TPU,
     measures) for the shapes the serving/training paths actually run.
     Off-TPU the sweeps time nothing — the rows carry the table defaults so
-    the artifact still records what each geometry resolves to."""
+    the artifact still records what each geometry resolves to.
+
+    The sweep records into a ``repro.obs.metrics`` registry and the rows
+    are read back out of its snapshot: the registry is the path of record
+    (mergeable across per-shape processes, same discipline as the serve
+    telemetry), not a side channel next to the artifact."""
     from repro.kernels.autotune import (measure_decode, measure_train,
                                         measured_table)
-    for cap in (128, 256, 1024):
-        r = measure_decode(cap)
-        emit(f"autotune_decode_cap{cap}",
-             min(r["timings_us"].values()) if r["measured"] else 0.0,
-             f"block={r['block']} "
-             + ("(measured)" if r["measured"] else "(table default)"))
-    for seq in (512, 2048):
-        r = measure_train(seq)
-        emit(f"autotune_train_S{seq}",
-             min(r["timings_us"].values()) if r["measured"] else 0.0,
-             f"block={r['block']} "
-             + ("(measured)" if r["measured"] else "(table default)"))
+    from repro.obs.metrics import MetricsRegistry
+    reg = MetricsRegistry()
+    shapes = ([(f"autotune_decode_cap{c}", c, measure_decode)
+               for c in (128, 256, 1024)]
+              + [(f"autotune_train_S{s}", s, measure_train)
+                 for s in (512, 2048)])
+    for name, size, measure in shapes:
+        r = measure(size)
+        reg.gauge(f"{name}.best_us").set(
+            min(r["timings_us"].values()) if r["measured"] else 0.0)
+        reg.gauge(f"{name}.block").set(int(r["block"]))
+        reg.counter(f"{name}.measured").set(int(bool(r["measured"])))
+    snap = reg.snapshot(prefix="autotune_")
+    for name, _, _ in shapes:
+        measured = bool(snap[f"{name}.measured"]["value"])
+        emit(name, snap[f"{name}.best_us"]["value"],
+             f"block={int(snap[f'{name}.block']['value'])} "
+             + ("(measured)" if measured else "(table default)"))
     ACCOUNTS["autotune_measured"] = measured_table()
 
 

@@ -2,7 +2,8 @@
 
     PYTHONPATH=src python -m benchmarks.serve_bench [--smoke] \
         [--attn-impl {dense,pallas}] [--repeat-frac F] \
-        [--ctx-heavy-tail] [--dump-scores] [--json BENCH_serve.json]
+        [--ctx-heavy-tail] [--dump-scores] [--json BENCH_serve.json] \
+        [--trace trace_serve.json] [--jax-profile DIR]
 
 Ways to score the same request stream (one user context, k candidate items
 per request), all producing the same p(click) per candidate:
@@ -45,6 +46,16 @@ pages). The run exits nonzero unless int8 retains >= 1.5x the cross-row
 prefix tokens and a strictly higher prefix hit rate than bf16, and both
 runs' scores stay within 0.05 of the fp32 naive oracle.
 
+``--trace PATH`` exports the scheduler mode's final drain as a
+Chrome-trace-event JSON (``repro.obs.trace``): nested scheduler-step ->
+prefill-chunk / burst / dispatch spans plus admission / hot-swap /
+finish / watchdog instants — loadable in Perfetto or chrome://tracing,
+summarized by ``python -m repro.launch.obs_report``. The run exits
+nonzero if the trace fails schema validation or lost the expected span
+shapes. ``--jax-profile DIR`` additionally captures a ``jax.profiler``
+device trace of the same drain, with decode dispatches annotated per
+jit bucket.
+
 ``--repeat-frac`` makes that fraction of requests revisit an earlier
 context with a fresh slate (``repro.data.requests.make_request_stream``),
 the traffic shape prefix sharing exploits. ``--ctx-heavy-tail`` switches
@@ -66,6 +77,7 @@ JSON output feeds the CI artifact next to BENCH_kernels.json.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import math
 import sys
@@ -80,6 +92,8 @@ from repro.core.dti import build_sliding_prompts
 from repro.data.requests import make_request_stream
 from repro.data.synthetic import make_ctr_dataset
 from repro.models.transformer import init_params
+from repro.obs import profile as obs_profile
+from repro.obs.trace import SpanTracer, validate_chrome_trace
 from repro.serve.engine import CTRServer
 from repro.serve.scheduler import ServeScheduler
 
@@ -161,7 +175,8 @@ def run_multi_target(params, cfg, requests, max_len):
 def run_scheduler(params, cfg, requests, *, n_slots, capacity, buckets,
                   attn_impl="dense", monolithic=False, overlap=True,
                   arrival_s=0.0, reps=1, paged=True,
-                  cache_dtype=None, kv_dtype=None, n_pages=None):
+                  cache_dtype=None, kv_dtype=None, n_pages=None,
+                  tracer=None):
     """Continuous batching: shared-context cache + non-committing bursts +
     cross-request prefix sharing, on the dense or Pallas decode path.
     ``monolithic=True`` runs the pre-budget chunking (+ per-step sync) as
@@ -175,12 +190,17 @@ def run_scheduler(params, cfg, requests, *, n_slots, capacity, buckets,
     measured drain on a fresh scheduler each time and keeps the rep with
     the lowest p99 — scores are deterministic across reps, only wall time
     moves, so best-of-N strips scheduler-external timing noise from the
-    policy comparison."""
+    policy comparison. ``tracer`` (a ``repro.obs.trace.SpanTracer``) is
+    cleared at the start of each rep, so it ends up holding the final
+    rep's span stream — enough for the trace artifact, without the
+    cross-rep interleaving a shared buffer would record."""
     best = None
     for _ in range(max(1, reps)):
         # fresh scheduler per rep: retained (refcounted) contexts from a
         # prior rep would hand later reps free prefix hits and collapse
         # the policy difference under test
+        if tracer is not None:
+            tracer.clear()
         sched = ServeScheduler(params, cfg, n_slots=n_slots,
                                capacity=capacity, window=cfg.window,
                                buckets=buckets, attn_impl=attn_impl,
@@ -188,7 +208,8 @@ def run_scheduler(params, cfg, requests, *, n_slots, capacity, buckets,
                                overlap=overlap, paged=paged,
                                cache_dtype=(cache_dtype if cache_dtype
                                             is not None else jnp.float32),
-                               kv_dtype=kv_dtype, n_pages=n_pages)
+                               kv_dtype=kv_dtype, n_pages=n_pages,
+                               tracer=tracer)
         sched.warmup()                       # compile every bucket shape
         sched.reset_stats()
         t0 = time.perf_counter()
@@ -228,6 +249,7 @@ def run_scheduler(params, cfg, requests, *, n_slots, capacity, buckets,
         out["shared_prefix_tokens"] = sum(
             results[r].shared_prefix_tokens for r in rids)
         out["telemetry"] = sched.telemetry()
+        out["jit_stats"] = sched.jit_stats()
         if best is None or out["latency_p99_ms"] < best["latency_p99_ms"]:
             best = out
     return best
@@ -329,6 +351,19 @@ def main():
     ap.add_argument("--dump-scores", action="store_true", dest="dump_scores",
                     help="embed every mode's raw per-candidate scores in "
                          "the JSON artifact (large; off by default)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export the scheduler mode's final drain as a "
+                         "Chrome-trace JSON (load in Perfetto / "
+                         "chrome://tracing, or summarize with "
+                         "python -m repro.launch.obs_report PATH); the "
+                         "run exits nonzero if the trace fails schema "
+                         "validation or misses the expected span shapes")
+    ap.add_argument("--jax-profile", default=None, dest="jax_profile",
+                    metavar="DIR",
+                    help="also capture a jax.profiler device trace of the "
+                         "scheduler-mode drain into DIR (spans annotate "
+                         "decode dispatches; no-op if the profiler is "
+                         "unavailable)")
     args = ap.parse_args()
 
     n_requests = args.requests or (8 if args.smoke else 32)
@@ -371,12 +406,22 @@ def main():
           f"repeat_frac={args.repeat_frac}"
           + (f", heavy-tail ctx (clamp {n_ctx_tail})"
              if args.ctx_heavy_tail else ""))
+    # host-side span tracer for the headline scheduler mode only: the
+    # other modes are references, and one mode's trace is what the
+    # viewer/summarizer consumes
+    tracer = (SpanTracer(jax_annotate=bool(args.jax_profile))
+              if (args.trace or args.jax_profile) else None)
+    prof = (obs_profile.trace(args.jax_profile) if args.jax_profile
+            else contextlib.nullcontext())
     modes = {
         "naive": run_naive(params, cfg, requests, sw_len),
         "multi_target": run_multi_target(params, cfg, requests, mt_len),
-        "scheduler": run_scheduler(params, cfg, requests, n_slots=args.slots,
-                                   capacity=capacity, buckets=buckets,
-                                   arrival_s=arrival_s, reps=reps),
+    }
+    with prof:
+        modes["scheduler"] = run_scheduler(
+            params, cfg, requests, n_slots=args.slots, capacity=capacity,
+            buckets=buckets, arrival_s=arrival_s, reps=reps, tracer=tracer)
+    modes.update({
         # the per-slot contiguous cache, recorded side by side: its
         # prefix reuse dies with the row (cross_row_hits == 0 by
         # construction), which is exactly what the paged radix index is
@@ -390,7 +435,7 @@ def main():
             params, cfg, requests, n_slots=args.slots, capacity=capacity,
             buckets=buckets, monolithic=True, overlap=False,
             arrival_s=arrival_s, reps=reps),
-    }
+    })
     shared_modes = ["multi_target", "scheduler", "scheduler_per_slot",
                     "scheduler_monolithic"]
     if args.attn_impl == "pallas":
@@ -506,6 +551,27 @@ def main():
     # validity gate: a benchmark that silently scored garbage (NaN burst,
     # stalled row) must fail the CI job, not upload a green artifact
     bad = []
+    if args.trace:
+        # export first (a malformed trace should still land on disk for
+        # inspection), then gate: schema-valid AND carrying the span
+        # shapes the scheduler is supposed to emit — a drain whose trace
+        # lost its step/prefill spans means the instrumentation regressed
+        tracer.save(args.trace)
+        doc = tracer.to_chrome_trace()
+        problems = validate_chrome_trace(doc)
+        names_x = {e["name"] for e in doc["traceEvents"]
+                   if e.get("ph") == "X"}
+        names_i = {e["name"] for e in doc["traceEvents"]
+                   if e.get("ph") == "i"}
+        if "scheduler.step" not in names_x:
+            problems.append("no scheduler.step span")
+        if not ({"prefill_chunk", "burst"} & names_x):
+            problems.append("no prefill_chunk/burst span")
+        if not ({"admission", "hot_swap", "finish"} & names_i):
+            problems.append("no admission/hot_swap/finish instant")
+        bad += [f"trace: {p}" for p in problems]
+        print(f"[serve_bench] wrote {args.trace} "
+              f"({len(tracer)} events, {len(problems)} problems)")
     for name, sc in all_scores.items():
         if not all(math.isfinite(float(s)) for req in sc for s in req):
             bad.append(f"{name}: non-finite score")

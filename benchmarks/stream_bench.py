@@ -1,7 +1,7 @@
 """Continual-training benchmark: periodic full retrain vs incremental DTI.
 
     PYTHONPATH=src python -m benchmarks.stream_bench [--smoke] \
-        [--json BENCH_stream.json]
+        [--json BENCH_stream.json] [--trace trace_stream.json]
 
 Production histories never stop growing, so the paper's O(m·n²)-vs-O(m·n)
 training-cost argument is really about *retraining*. This bench replays
@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 from typing import Dict, List
 
@@ -51,6 +52,7 @@ from repro.core.metrics import ctr_metrics
 from repro.data.requests import make_event_stream, warm_histories
 from repro.data.synthetic import make_ctr_dataset
 from repro.models.transformer import init_params
+from repro.obs.trace import SpanTracer, validate_chrome_trace
 from repro.serve.engine import make_prefill_fn
 from repro.stream import (IncrementalDTI, OnlineTrainer, StreamPipeline,
                           make_stream_loss_fn)
@@ -155,7 +157,7 @@ def run_full_retrain(base_params, cfg, window, ds, ticks, *, paradigm,
 
 
 def run_stream(base_params, cfg, window, ds, ticks, *, n_ctx, k, max_len,
-               batch, lr, evaluator, seed, eval_every=1):
+               batch, lr, evaluator, seed, eval_every=1, tracer=None):
     # Smaller fixed batches than the offline epochs: a tick's rows rarely
     # fill an offline-sized batch, and padding-by-duplication is real
     # compute — the per-tick batch is the pipeline's freshness/efficiency
@@ -169,14 +171,15 @@ def run_stream(base_params, cfg, window, ds, ticks, *, n_ctx, k, max_len,
     ocfg = OptimizerConfig(lr=lr, schedule="const", warmup_steps=1,
                            total_steps=10_000)
     ot = OnlineTrainer(make_stream_loss_fn(cfg, window), base_params, ocfg,
-                       publish_every=0, window_targets=128)
+                       publish_every=0, window_targets=128, tracer=tracer)
     clock = 0.0
     tokens = slots = 0
     freshness, auc_t = [], []
     for t, tick in enumerate(ticks):
         arrival = clock
         t0 = time.perf_counter()
-        pipe = StreamPipeline(iter([tick]), inc, batch_size=batch)
+        pipe = StreamPipeline(iter([tick]), inc, batch_size=batch,
+                              tracer=tracer)
         ot.run(pipe.batches(), rng=jax.random.PRNGKey(seed + t))
         jax.block_until_ready(ot.state.params)
         clock += time.perf_counter() - t0
@@ -236,6 +239,12 @@ def main(argv=None):
                          "every tick (freshness policy matched to streaming)")
     ap.add_argument("--warm-epochs", type=int, default=2, dest="warm_epochs")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export the stream_dti mode as a Chrome-trace "
+                         "JSON (stream.tick packing spans from the worker "
+                         "thread interleaved with online.step train "
+                         "spans; see docs/observability.md); exits "
+                         "nonzero on a schema-invalid or span-less trace")
     args = ap.parse_args(argv)
 
     users = args.users or (10 if args.smoke else 24)
@@ -280,6 +289,10 @@ def main(argv=None):
 
     common = dict(n_ctx=args.n_ctx, k=args.k, batch=args.batch, lr=args.lr,
                   evaluator=evaluator, seed=args.seed)
+    # tracer for the streaming mode only: its per-tick pipeline + online
+    # steps are the subsystem under observation; the full-retrain modes
+    # are cost references
+    tracer = SpanTracer() if args.trace else None
     modes = {
         "full_sw": run_full_retrain(
             base_params, cfg, window, ds, ticks, paradigm="sw",
@@ -289,6 +302,7 @@ def main(argv=None):
             max_len=dti_len, retrain_every=args.retrain_every, **common),
         "stream_dti": run_stream(
             base_params, cfg, window, ds, ticks, max_len=dti_len,
+            tracer=tracer,
             **dict(common, batch=stream_batch, lr=stream_lr)),
     }
     for name, m in modes.items():
@@ -319,6 +333,26 @@ def main(argv=None):
         with open(args.json, "w") as f:
             json.dump(result, f, indent=2)
         print(f"[stream_bench] wrote {args.json}")
+
+    if args.trace:
+        # export first, then gate: a trace missing the pipeline's packing
+        # spans or the trainer's step spans means the streaming
+        # instrumentation regressed, and CI must notice
+        tracer.save(args.trace)
+        doc = tracer.to_chrome_trace()
+        problems = validate_chrome_trace(doc)
+        names_x = {e["name"] for e in doc["traceEvents"]
+                   if e.get("ph") == "X"}
+        if "stream.tick" not in names_x:
+            problems.append("no stream.tick span")
+        if "online.step" not in names_x:
+            problems.append("no online.step span")
+        print(f"[stream_bench] wrote {args.trace} "
+              f"({len(tracer)} events, {len(problems)} problems)")
+        if problems:
+            print(f"[stream_bench] INVALID TRACE: {'; '.join(problems)}",
+                  file=sys.stderr)
+            sys.exit(1)
     return result
 
 

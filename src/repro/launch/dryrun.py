@@ -18,10 +18,11 @@ EXPERIMENTS.md §Dry-run and §Roofline are generated from them.
 """
 import argparse
 import json
-import time
 import traceback
 
 import jax
+
+from repro.obs.clock import monotonic
 
 from repro.configs import ASSIGNED, all_cells, get_arch
 from repro.launch.hlo import analyze_hlo, collective_bytes, xla_cost_analysis
@@ -37,13 +38,13 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool,
              overrides=None, verbose: bool = True) -> dict:
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_dev = mesh.devices.size
-    t0 = time.time()
+    t0 = monotonic()
     cell = build_cell(arch, shape, mesh, overrides=overrides)
     lowered = jax.jit(cell.step_fn, donate_argnums=cell.donate
                       ).lower(*cell.args)
-    t_lower = time.time() - t0
+    t_lower = monotonic() - t0
     compiled = lowered.compile()
-    t_compile = time.time() - t0 - t_lower
+    t_compile = monotonic() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     cost = xla_cost_analysis(compiled)

@@ -30,7 +30,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import os
-import time
 from typing import Dict, List
 
 import jax
@@ -46,6 +45,7 @@ from repro.core.losses import ctr_loss
 from repro.core.metrics import ctr_metrics
 from repro.data.synthetic import make_ctr_dataset, split_users
 from repro.models.transformer import ModelConfig, forward, init_params
+from repro.obs.clock import monotonic
 from repro.serve.engine import make_prefill_fn
 from repro.train.checkpoint import CheckpointManager
 from repro.train.optimizer import OptimizerConfig
@@ -179,18 +179,30 @@ def run_lm(args) -> Dict:
             yield from batch_prompts(train_prompts, args.batch, rng=rng,
                                      drop_remainder=False)
 
-    t0 = time.time()
+    t0 = monotonic()
     trainer.run(batches(), n_steps=args.steps)
-    train_time = time.time() - t0
+    train_time = monotonic() - t0
 
     metrics = evaluate_lm(trainer.state.params, cfg, window, test_prompts,
                           test_labels)
+    # compile-vs-steady split (repro.obs / Trainer.timing): short runs
+    # fold the first step's XLA compile into wall time, so headline
+    # tok/s comes from the steady half only
+    timing = trainer.timing()
+    steady_tok_s = (args.batch * max_len * (1 - stats.pad_fraction)
+                    / timing["step_s"] if timing["step_s"] else 0.0)
     result = {"paradigm": args.paradigm, "k": args.k,
               "train_time_s": train_time, "steps": trainer.step,
+              "compile_s": timing["compile_s"],
+              "steady_step_s": timing["step_s"],
+              "steady_tokens_per_s": steady_tok_s,
               "prompts": stats.n_prompts, "train_tokens": stats.n_tokens,
               "packed": bool(args.pack),
               "pad_fraction": stats.pad_fraction,
               **metrics}
+    print(f"[timing] compile {timing['compile_s']:.2f}s, steady step "
+          f"{timing['step_s']*1e3:.0f}ms x {timing['steady_steps']} "
+          f"({steady_tok_s:.0f} tok/s)")
     print(f"[result] {result}")
     return result
 

@@ -1,0 +1,42 @@
+"""The repo-wide duration clock.
+
+Every elapsed-time measurement (scheduler steps, trainer steps, bench
+reps, resilience retry buckets) goes through :func:`monotonic` so that
+durations are immune to wall-clock jumps (NTP slew, manual resets).
+``time.time()`` survives only where a *timestamp with calendar meaning*
+is required — checkpoint metadata — via :func:`wall`, which exists so
+grep can distinguish deliberate wall-clock reads from stragglers.
+
+Tests inject deterministic clocks instead of monkeypatching:
+``SpanTracer(clock=fake)`` and :class:`ManualClock` make timing
+assertions exact rather than tolerance-based.
+"""
+from __future__ import annotations
+
+import time
+
+#: The duration clock: monotonic, sub-microsecond resolution.
+monotonic = time.perf_counter
+
+
+def wall() -> float:
+    """Wall-clock *timestamp* (seconds since epoch).
+
+    Only for metadata that must survive process restarts with calendar
+    meaning (checkpoint manifests).  Never subtract two ``wall()`` reads
+    to get a duration — use :func:`monotonic`.
+    """
+    return time.time()
+
+
+class ManualClock:
+    """Deterministic clock for tests: advances only when told to."""
+
+    def __init__(self, start: float = 0.0):
+        self.now = float(start)
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, dt: float) -> None:
+        self.now += float(dt)

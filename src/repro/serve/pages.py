@@ -31,6 +31,8 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro.obs.metrics import MetricsRegistry
+
 
 class PagePool:
     """Fixed-size page allocator: free list + per-page refcounts.
@@ -47,7 +49,8 @@ class PagePool:
     """
 
     def __init__(self, n_pages: int, page_size: int,
-                 *, token_bytes: float = 0.0):
+                 *, token_bytes: float = 0.0,
+                 metrics: Optional[MetricsRegistry] = None):
         assert n_pages > 0 and page_size > 0
         self.n_pages = int(n_pages)
         self.page_size = int(page_size)
@@ -55,8 +58,31 @@ class PagePool:
         self.ref = np.zeros(self.n_pages, np.int32)
         # stack: pop() hands out low page ids first
         self._free: List[int] = list(range(self.n_pages - 1, -1, -1))
-        self.evictions = 0          # pages reclaimed from the prefix index
-        self.alloc_total = 0        # pages ever handed out
+        # counters live in a metrics registry (the scheduler passes its
+        # own, so pool counters ride scheduler snapshots); the plain
+        # attribute API (`pool.evictions`, `pool.evictions = 0`) is kept
+        # as properties over the registry
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._c_evictions = self.metrics.counter("pool.evictions")
+        self._c_alloc_total = self.metrics.counter("pool.alloc_total")
+
+    @property
+    def evictions(self) -> int:
+        """Pages reclaimed from the prefix index."""
+        return self._c_evictions.value
+
+    @evictions.setter
+    def evictions(self, v: int) -> None:
+        self._c_evictions.set(int(v))
+
+    @property
+    def alloc_total(self) -> int:
+        """Pages ever handed out."""
+        return self._c_alloc_total.value
+
+    @alloc_total.setter
+    def alloc_total(self, v: int) -> None:
+        self._c_alloc_total.set(int(v))
 
     def free_count(self) -> int:
         return len(self._free)
@@ -83,7 +109,7 @@ class PagePool:
         for p in out:
             assert self.ref[p] == 0, f"page {p} on free list with ref set"
             self.ref[p] = 1
-        self.alloc_total += n
+        self._c_alloc_total.inc(n)
         return out
 
     def incref(self, pages) -> None:
@@ -101,7 +127,7 @@ class PagePool:
                 self._free.append(int(p))
 
     def note_evictions(self, n: int) -> None:
-        self.evictions += int(n)
+        self._c_evictions.inc(int(n))
 
 
 __all__ = ["PagePool"]

@@ -74,8 +74,8 @@ last score) so tail regressions are attributable.
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import deque
+from contextlib import nullcontext
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -85,11 +85,58 @@ import numpy as np
 from repro.core.dti import SpecialTokens
 from repro.data.requests import RadixTree
 from repro.models.transformer import ModelConfig
+from repro.obs import profile as obs_profile
+from repro.obs.clock import monotonic
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER
 from repro.serve.cache import (adopt_slots, free_slots, init_lm_cache,
                                kv_cache_bytes, kv_token_bytes, retain_slots,
                                trim_slots)
 from repro.serve.engine import make_decode_fn
 from repro.serve.pages import PagePool
+
+_NULLCTX = nullcontext()
+
+#: Lifecycle schema of every key ``telemetry()`` may report. ``kind``:
+#: ``counter`` (accumulates, zeroed by ``reset_telemetry``), ``derived``
+#: (computed from counters, falls to its documented reset value),
+#: ``state`` (live cache/pool occupancy — reset does not touch it),
+#: ``config`` (construction-time constant). ``reset`` is the exact
+#: post-``reset_telemetry()`` value for resettable keys
+#: ("zero_map" = dict with every value 0).  tests/test_obs.py checks
+#: (a) every reported key appears here — a new counter cannot be added
+#: without declaring its reset behaviour — and (b) resettable keys
+#: really do come back as their documented zero.
+TELEMETRY_SCHEMA: Dict[str, Dict[str, Any]] = {
+    "steps": {"kind": "counter", "reset": 0},
+    "overlap": {"kind": "config"},
+    "bucket_steps": {"kind": "counter", "reset": "zero_map"},
+    "queue_depth_mean": {"kind": "derived", "reset": 0.0},
+    "queue_depth_max": {"kind": "counter", "reset": 0},
+    "prefill_budget": {"kind": "config"},
+    "prefill_tokens": {"kind": "counter", "reset": 0},
+    "prefill_steps": {"kind": "counter", "reset": 0},
+    "budget_utilization": {"kind": "derived", "reset": None},
+    "prefill_starved_steps": {"kind": "counter", "reset": 0},
+    "watchdog_fired": {"kind": "counter", "reset": 0},
+    "watchdog_rows": {"kind": "counter", "reset": []},
+    "watchdog_stuck_rids": {"kind": "counter", "reset": []},
+    "paged": {"kind": "config"},
+    "cross_row_hits": {"kind": "counter", "reset": 0},
+    "cross_row_tokens": {"kind": "counter", "reset": 0},
+    "prefix_hit_rate": {"kind": "derived", "reset": 0.0},
+    "kv_dtype": {"kind": "config"},
+    "kv_bytes": {"kind": "state"},
+    "kv_token_bytes": {"kind": "config"},
+    "kv_bytes_committed": {"kind": "counter", "reset": 0},
+    "page_size": {"kind": "config"},
+    "pages_in_use": {"kind": "state"},
+    "pages_free": {"kind": "state"},
+    "page_evictions": {"kind": "counter", "reset": 0},
+    "radix_pages": {"kind": "state"},
+    "pool_capacity_tokens": {"kind": "config"},
+    "pool_bytes": {"kind": "config"},
+}
 
 
 @dataclasses.dataclass
@@ -255,7 +302,8 @@ class ServeScheduler:
                  overlap: bool = True,
                  watchdog_steps: int = 256,
                  paged: bool = True, page_size: int = 16,
-                 n_pages: Optional[int] = None):
+                 n_pages: Optional[int] = None,
+                 tracer=None):
         if window is None:
             window = cfg.window          # match make_prefill_fn's default
         self.params = params
@@ -276,6 +324,28 @@ class ServeScheduler:
         self.overlap = bool(overlap)
         self.watchdog_steps = int(watchdog_steps)
         self.paged = bool(paged)
+        # observability: a tracer (default no-op) plus the metrics
+        # registry backing every counter telemetry() reports. The public
+        # counter attributes (`n_steps`, `shared_admissions`, ...) are
+        # read-only properties over these — same names, same values.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = MetricsRegistry()
+        m = self.metrics
+        self._c_steps = m.counter("serve.steps")
+        self._c_shared_admissions = m.counter("serve.shared_admissions")
+        self._c_cross_row_hits = m.counter("serve.cross_row_hits")
+        self._c_cross_row_tokens = m.counter("serve.cross_row_tokens")
+        self._c_watchdog_fired = m.counter("serve.watchdog_fired")
+        self._c_budget_used = m.counter("serve.prefill_tokens")
+        self._c_budget_avail = m.counter("serve.prefill_budget_avail")
+        self._c_kv_committed = m.counter("serve.kv_bytes_committed")
+        self._c_starved = m.counter("serve.prefill_starved_steps")
+        self._c_prefill_steps = m.counter("serve.prefill_steps")
+        self._c_ctx_done = m.counter("serve.ctx_tokens_done")
+        self._c_shared_done = m.counter("serve.shared_tokens_done")
+        self._c_bucket = {int(b): m.counter(f"serve.bucket_steps.{int(b)}")
+                          for b in self.buckets}
+        self._h_qdepth = m.histogram("serve.queue_depth")
         if self.paged:
             # each row addresses the global page pool through its page
             # table; the pool defaults to the same total slot count as the
@@ -286,7 +356,7 @@ class ServeScheduler:
             max_pages = cap_eff // page_size
             if n_pages is None:
                 n_pages = n_slots * max_pages
-            self._pool = PagePool(n_pages, page_size)
+            self._pool = PagePool(n_pages, page_size, metrics=self.metrics)
             # host mirror of the device page tables (authoritative copy;
             # synced to the cache dict whenever dirty)
             self._tables = np.full((n_slots, max_pages), -1, np.int32)
@@ -333,8 +403,6 @@ class ServeScheduler:
         self._next_rid = 0
         self._inflight: deque = deque()  # dispatched, un-harvested steps
         self._prefill_rr = 0             # rotates budget priority over rows
-        self.n_steps = 0
-        self.shared_admissions = 0       # requests that reused a prefix
         self._param_source = None
         self._poll_every = 1
         self._poll_tick = 0
@@ -343,29 +411,61 @@ class ServeScheduler:
 
     # -- telemetry -----------------------------------------------------------
 
+    # registry-backed views keeping the historic attribute API
+    # (`sched.n_steps`, benchmarks, tests — reads and writes) intact
+    # post-migration
+    @property
+    def n_steps(self) -> int:
+        return self._c_steps.value
+
+    @n_steps.setter
+    def n_steps(self, v: int) -> None:
+        self._c_steps.set(int(v))
+
+    @property
+    def shared_admissions(self) -> int:
+        """Requests that reused a prefix."""
+        return self._c_shared_admissions.value
+
+    @shared_admissions.setter
+    def shared_admissions(self, v: int) -> None:
+        self._c_shared_admissions.set(int(v))
+
+    @property
+    def cross_row_hits(self) -> int:
+        """Admissions served from the radix page index (pages another
+        row or no row currently holds)."""
+        return self._c_cross_row_hits.value
+
+    @cross_row_hits.setter
+    def cross_row_hits(self, v: int) -> None:
+        self._c_cross_row_hits.set(int(v))
+
+    @property
+    def cross_row_tokens(self) -> int:
+        return self._c_cross_row_tokens.value
+
+    @cross_row_tokens.setter
+    def cross_row_tokens(self, v: int) -> None:
+        self._c_cross_row_tokens.set(int(v))
+
+    @property
+    def watchdog_fired(self) -> int:
+        return self._c_watchdog_fired.value
+
+    @watchdog_fired.setter
+    def watchdog_fired(self, v: int) -> None:
+        self._c_watchdog_fired.set(int(v))
+
     def reset_stats(self) -> None:
         """Zero the step/telemetry counters (benchmarks call this after
         warmup so compile steps don't pollute the measured run). In-flight
-        state, retained blocks and results are untouched."""
-        self.n_steps = 0
-        self.shared_admissions = 0
-        self.cross_row_hits = 0          # admissions served from the radix
-        self.cross_row_tokens = 0        # page index (pages another row or
-                                         # no row currently holds)
-        self.watchdog_fired = 0
+        state, retained blocks and results are untouched — and so are the
+        one-shot ``jit.*`` compile gauges (``jit_stats()``), which live
+        outside the ``serve.``/``pool.`` reset scopes."""
+        self.metrics.reset(prefix="serve.")
         self.watchdog_stuck_rids: List[int] = []
         self._watchdog_rows: set = set()
-        self._bucket_steps: Dict[int, int] = {int(b): 0 for b in self.buckets}
-        self._qdepth_sum = 0
-        self._qdepth_max = 0
-        self._qdepth_n = 0
-        self._budget_used = 0
-        self._budget_avail = 0
-        self._kv_bytes_committed = 0     # bytes of KV landed by commits
-        self._starved_steps = 0
-        self._prefill_steps = 0          # steps that dispatched >=1 commit
-        self._ctx_tokens_done = 0        # finished requests' context tokens
-        self._shared_tokens_done = 0     # ... of which served from cache
         if self.paged:
             self._pool.evictions = 0
         for r in self._rows:
@@ -398,38 +498,38 @@ class ServeScheduler:
         # guard the burst-only / zero-prefill case: with no prefill steps
         # dispatched there is no budget demand to divide by — report None,
         # never a ZeroDivisionError
-        util = (self._budget_used / self._budget_avail
-                if self._budget_avail else None)
+        util = (self._c_budget_used.value / self._c_budget_avail.value
+                if self._c_budget_avail.value else None)
+        qd = self._h_qdepth
         out = {
             "steps": int(self.n_steps),
             "overlap": bool(self.overlap),
-            "bucket_steps": {int(b): int(c)
-                             for b, c in sorted(self._bucket_steps.items())},
-            "queue_depth_mean": (self._qdepth_sum / self._qdepth_n
-                                 if self._qdepth_n else 0.0),
-            "queue_depth_max": int(self._qdepth_max),
+            "bucket_steps": {b: int(c.value)
+                             for b, c in sorted(self._c_bucket.items())},
+            "queue_depth_mean": qd.mean if qd.count else 0.0,
+            "queue_depth_max": int(qd.vmax) if qd.count else 0,
             "prefill_budget": (None if self.monolithic_prefill
                                else int(self.prefill_budget)),
-            "prefill_tokens": int(self._budget_used),
-            "prefill_steps": int(self._prefill_steps),
+            "prefill_tokens": int(self._c_budget_used.value),
+            "prefill_steps": int(self._c_prefill_steps.value),
             "budget_utilization": (None if self.monolithic_prefill else util),
-            "prefill_starved_steps": int(self._starved_steps),
+            "prefill_starved_steps": int(self._c_starved.value),
             "watchdog_fired": int(self.watchdog_fired),
             "watchdog_rows": sorted(int(i) for i in self._watchdog_rows),
             "watchdog_stuck_rids": list(self.watchdog_stuck_rids),
             "paged": bool(self.paged),
             "cross_row_hits": int(self.cross_row_hits),
             "cross_row_tokens": int(self.cross_row_tokens),
-            "prefix_hit_rate": (self._shared_tokens_done
-                                / self._ctx_tokens_done
-                                if self._ctx_tokens_done else 0.0),
+            "prefix_hit_rate": (self._c_shared_done.value
+                                / self._c_ctx_done.value
+                                if self._c_ctx_done.value else 0.0),
             # KV footprint: dtype, whole-cache bytes, per-token bytes
             # (codes + any scale sidecar) and bytes landed by commits —
             # the equal-HBM-budget axis of the quantized-vs-bf16 benches
             "kv_dtype": self.kv_dtype or "native",
             "kv_bytes": int(kv_cache_bytes(self.cache)),
             "kv_token_bytes": float(self._kv_token_bytes),
-            "kv_bytes_committed": int(self._kv_bytes_committed),
+            "kv_bytes_committed": int(self._c_kv_committed.value),
         }
         if self.paged:
             out.update({
@@ -447,15 +547,34 @@ class ServeScheduler:
         """Pre-compile the decode step for every bucket shape with an
         all-invalid, non-committing wave. No row state changes (invalid
         slots write pos −1 that ``commit=False`` discards), so serving
-        traffic never hits a compile mid-request."""
+        traffic never hits a compile mid-request.
+
+        Because this is the one place every jit bucket is entered cold
+        and off the hot path, it also measures per-bucket compile-vs-
+        execute time (first call = compile + execute, second = execute)
+        into the ``jit.*`` gauges — see ``jit_stats()``. The blocking
+        calls here are warmup-only; the serving hot path stays at its
+        single harvest sync."""
         for s in self.buckets:
             z = np.zeros((self.n_slots, s), np.int32)
             f = np.zeros((self.n_slots, s), bool)
-            p, self.cache = self._decode(
-                self.params, self.cache, jnp.asarray(z), jnp.asarray(z),
-                jnp.asarray(f), jnp.asarray(f),
-                jnp.asarray(np.zeros((self.n_slots,), bool)),
-                jnp.asarray(np.full((self.n_slots, s), -1, np.int32)))
+            args = (jnp.asarray(z), jnp.asarray(z), jnp.asarray(f),
+                    jnp.asarray(f),
+                    jnp.asarray(np.zeros((self.n_slots,), bool)),
+                    jnp.asarray(np.full((self.n_slots, s), -1, np.int32)))
+            t0 = monotonic()
+            p, self.cache = self._decode(self.params, self.cache, *args)
+            jax.block_until_ready(p)
+            t1 = monotonic()
+            p, self.cache = self._decode(self.params, self.cache, *args)
+            jax.block_until_ready(p)
+            t2 = monotonic()
+            first, execute = t1 - t0, t2 - t1
+            pre = f"jit.bucket{int(s)}"
+            self.metrics.gauge(pre + ".first_s").set(first)
+            self.metrics.gauge(pre + ".execute_s").set(execute)
+            self.metrics.gauge(pre + ".compile_s").set(
+                max(0.0, first - execute))
         # the row-op jits too (no-op masks/counts), so the first real
         # admission/eviction doesn't pay their compiles mid-run
         none = jnp.asarray(np.zeros((self.n_slots,), bool))
@@ -465,6 +584,24 @@ class ServeScheduler:
         self.cache = self._adopt(self.cache, none, zc)
         self.cache = self._retain(self.cache, zc)
         jax.block_until_ready(self.cache["pos"])
+
+    def jit_stats(self) -> Dict[int, Dict[str, float]]:
+        """Per-jit-bucket compile-vs-execute timing measured by
+        ``warmup()``: ``{bucket: {compile_s, execute_s, first_s}}``.
+        Empty before warmup. Survives ``reset_stats`` (the gauges sit
+        under the un-reset ``jit.`` prefix), so benchmarks that reset
+        after warmup still report what the compiles cost."""
+        out: Dict[int, Dict[str, float]] = {}
+        for s in self.buckets:
+            pre = f"jit.bucket{int(s)}"
+            g = self.metrics.gauge(pre + ".first_s")
+            if g.seq:
+                out[int(s)] = {
+                    "compile_s": self.metrics.gauge(pre + ".compile_s").value,
+                    "execute_s": self.metrics.gauge(pre + ".execute_s").value,
+                    "first_s": g.value,
+                }
+        return out
 
     # -- weight hot-swap -----------------------------------------------------
 
@@ -506,6 +643,7 @@ class ServeScheduler:
         and the committer re-commits its full context from position 0
         under the new weights. Chunked and monolithic prefill therefore
         score identically across a mid-prefill swap."""
+        self.tracer.instant("hot_swap", version=version)
         self.params = params
         if version is not None:
             self.params_version = version
@@ -584,7 +722,10 @@ class ServeScheduler:
                 f"burst {longest} tokens overflow capacity {self.capacity} "
                 f"(commits past capacity would be silently dropped)")
         self._queue.append((rid, ctx, [list(c) for c in candidates],
-                            time.perf_counter()))
+                            monotonic()))
+        if self.tracer.enabled:
+            self.tracer.instant("submit", rid=rid, context=len(ctx),
+                                k=len(candidates))
         return rid
 
     def prewarm(self, context: Sequence[Sequence[int]]) -> Optional[int]:
@@ -615,7 +756,10 @@ class ServeScheduler:
             return None
         rid = self._next_rid
         self._next_rid += 1
-        self._queue.append((rid, ctx, [], time.perf_counter()))
+        self._queue.append((rid, ctx, [], monotonic()))
+        if self.tracer.enabled:
+            self.tracer.instant("submit", rid=rid, context=len(ctx),
+                                k=0, prewarm=True)
         return rid
 
     # -- unit construction ---------------------------------------------------
@@ -841,7 +985,7 @@ class ServeScheduler:
     def _admit(self, row: int, rid: int, ctx: List[int],
                candidates: List[List[int]], t0: float, *,
                shared_depth: int, commit_from: int,
-               suffix_in_burst: bool) -> None:
+               suffix_in_burst: bool, rung: int = 0) -> None:
         """Build the request's work on ``row``: resumable prefill state for
         the context tokens no committed block covers, plus its burst queue.
 
@@ -851,7 +995,9 @@ class ServeScheduler:
         ``suffix_in_burst``— True when the row is busy with other readers,
                              so the unshared tail ``ctx[shared_depth:]``
                              must ride each burst instead of extending the
-                             shared block.
+                             shared block;
+        ``rung``           — which admission-ladder rung placed it
+                             (1..4, see ``_try_place``; trace-only).
         """
         n = len(ctx)
         r = self._rows[row]
@@ -875,7 +1021,7 @@ class ServeScheduler:
         slot = _Slot(rid=rid, row=row, units=deque(bursts), prefill=prefill,
                      context=list(ctx),
                      scores=[None] * len(candidates), submit_t=t0,
-                     admit_t=time.perf_counter(),
+                     admit_t=monotonic(),
                      n_context=n, prefill_tokens=len(to_commit),
                      burst_tokens=burst_total,
                      slate_tokens=sum(len(c) + 1 for c in candidates),
@@ -883,11 +1029,15 @@ class ServeScheduler:
                      n_candidates=len(candidates))
         r.active.append(slot)
         if shared_depth > 0:
-            self.shared_admissions += 1
+            self._c_shared_admissions.inc()
+        if self.tracer.enabled:
+            self.tracer.instant("admission", rid=rid, row=row, rung=rung,
+                                shared=shared_depth,
+                                commit=len(to_commit))
         if prefill is None and not slot.units:
             # a prewarm whose context is already fully resident: nothing
             # to dispatch, the request completes at admission
-            self._finish(slot, time.perf_counter())
+            self._finish(slot, monotonic())
 
     def _try_place(self, rid: int, ctx: List[int],
                    candidates: List[List[int]], t0: float) -> bool:
@@ -960,7 +1110,7 @@ class ServeScheduler:
                         self._rows[row].retained = False  # hold transfers
                         self._admit(row, rid, ctx, candidates, t0,
                                     shared_depth=end_d, commit_from=end_d,
-                                    suffix_in_burst=False)
+                                    suffix_in_burst=False, rung=1)
                         return True
                 # the suffix-fits check depends only on the request: all
                 # rows in `busy` share the same committed length end_d
@@ -972,7 +1122,7 @@ class ServeScheduler:
                         self._mark("retain", row)
                         self._admit(row, rid, ctx, candidates, t0,
                                     shared_depth=end_d, commit_from=n,
-                                    suffix_in_burst=True)
+                                    suffix_in_burst=True, rung=2)
                         return True
             if thr_d >= self.min_shared_prefix:
                 trimmable = [i for i in sorted(thr_rows)
@@ -1026,7 +1176,7 @@ class ServeScheduler:
                         self._mark("trim", row, keep=keep)
                         self._admit(row, rid, ctx, candidates, t0,
                                     shared_depth=keep, commit_from=keep,
-                                    suffix_in_burst=False)
+                                    suffix_in_burst=False, rung=3)
                         return True
         row = None
         fresh = [i for i, r in enumerate(self._rows)
@@ -1051,7 +1201,8 @@ class ServeScheduler:
             return False
         if not self.paged:
             self._admit(row, rid, ctx, candidates, t0,
-                        shared_depth=0, commit_from=0, suffix_in_burst=False)
+                        shared_depth=0, commit_from=0, suffix_in_burst=False,
+                        rung=4)
             return True
         # paged rung 4: adopt any radix-indexed prefix pages (shared KV
         # that survives row steals), then allocate private pages for the
@@ -1083,11 +1234,11 @@ class ServeScheduler:
         self._tables_dirty = True
         if depth:
             self._mark("adopt", row, keep=depth)
-            self.cross_row_hits += 1
-            self.cross_row_tokens += depth
+            self._c_cross_row_hits.inc()
+            self._c_cross_row_tokens.inc(depth)
         self._admit(row, rid, ctx, candidates, t0,
                     shared_depth=depth, commit_from=depth,
-                    suffix_in_burst=False)
+                    suffix_in_burst=False, rung=4)
         return True
 
     # -- the batched step ----------------------------------------------------
@@ -1190,12 +1341,12 @@ class ServeScheduler:
             if pf.remaining == 0:
                 self._rows[i].pending_commit -= 1
         if pending:
-            self._budget_used += used
-            self._kv_bytes_committed += int(used * self._kv_token_bytes)
+            self._c_budget_used.inc(used)
+            self._c_kv_committed.inc(int(used * self._kv_token_bytes))
             if budget is not None:
-                self._budget_avail += min(cap0, demand)
+                self._c_budget_avail.inc(min(cap0, demand))
                 if starved:
-                    self._starved_steps += 1
+                    self._c_starved.inc()
         return work, s
 
     def _finish(self, slot: _Slot, now: float) -> None:
@@ -1219,8 +1370,8 @@ class ServeScheduler:
         # logical cost is exactly what it computed (cached_tokens = 0)
         logical_tokens = (k * n + slot.slate_tokens) if k else computed
         if k:
-            self._ctx_tokens_done += n
-            self._shared_tokens_done += slot.shared_prefix_tokens
+            self._c_ctx_done.inc(n)
+            self._c_shared_done.inc(slot.shared_prefix_tokens)
         self._results[slot.rid] = RequestResult(
             rid=slot.rid, scores=list(slot.scores),
             latency_s=now - slot.submit_t,
@@ -1231,6 +1382,8 @@ class ServeScheduler:
             shared_prefix_tokens=slot.shared_prefix_tokens,
             cached_tokens=logical_tokens - computed,
             logical_tokens=logical_tokens)
+        if self.tracer.enabled:
+            self.tracer.instant("finish", rid=slot.rid, row=slot.row)
         r.active.remove(slot)
         if self.share_prefix:
             if r.active:
@@ -1262,9 +1415,14 @@ class ServeScheduler:
         flight."""
         if not self._inflight:
             return False
+        with self.tracer.span("harvest"):
+            self._harvest_body()
+        return True
+
+    def _harvest_body(self) -> None:
         p, work, _ = self._inflight.popleft()
         p = np.asarray(p)
-        now = time.perf_counter()
+        now = monotonic()
         for row, slot, u in work:
             for j, off in u.score_at:
                 slot.scores[j] = float(p[row, off])
@@ -1282,7 +1440,6 @@ class ServeScheduler:
                 # fully written before any adopter reads it)
                 self._finish(slot, now)
         self._flush_row_ops()          # departing readers' refs drop once
-        return True
 
     def _watchdog_scan(self, scheduled: set) -> None:
         """Flag rows holding backlog that has not dispatched for more than
@@ -1297,14 +1454,27 @@ class ServeScheduler:
             elif (self.n_steps - r.last_progress > self.watchdog_steps
                   and i not in self._watchdog_rows):
                 self._watchdog_rows.add(i)
-                self.watchdog_fired += 1
+                self._c_watchdog_fired.inc()
+                self.tracer.instant("watchdog", row=i)
 
     def step(self) -> bool:
         """Admit queued requests (strict FIFO, as many as place), dispatch
         one batched decode step over every busy row's next work unit, and
         harvest scores — one step behind the dispatch when ``overlap`` is
         on, immediately otherwise. Returns False when queue, rows and the
-        in-flight pipeline are all drained (nothing happened)."""
+        in-flight pipeline are all drained (nothing happened).
+
+        With a tracer attached each step emits one ``scheduler.step``
+        span with nested ``admit`` / ``build_wave`` / per-unit
+        ``prefill_chunk``/``burst`` / ``dispatch`` / ``harvest`` child
+        spans; the tracer touches only host clocks + a ring append, so
+        the step's device-sync profile is identical traced or not
+        (asserted by tests/test_obs.py)."""
+        sp = self.tracer.span("scheduler.step")
+        with sp:
+            return self._step_impl(sp)
+
+    def _step_impl(self, sp) -> bool:
         if self._param_source is not None:
             # dedicated counter: n_steps stalls on idle calls, which would
             # either re-poll every call or never poll again
@@ -1324,17 +1494,21 @@ class ServeScheduler:
                 self._inflight[0][0].is_ready()
                 or (self._queue and self._inflight[0][2])):
             self._harvest_one()
-        while self._queue:
-            rid, ctx, cands, t0 = self._queue[0]
-            if not self._try_place(rid, ctx, cands, t0):
-                break
-            self._queue.popleft()
+        if self._queue:
+            with self.tracer.span("admit"):
+                while self._queue:
+                    rid, ctx, cands, t0 = self._queue[0]
+                    if not self._try_place(rid, ctx, cands, t0):
+                        break
+                    self._queue.popleft()
         self._flush_row_ops()          # steals/trims land before the decode
 
-        wave = self._build_wave()
+        with self.tracer.span("build_wave"):
+            wave = self._build_wave()
         if wave is None:
             return self._harvest_one()     # drain the pipeline tail
         work, s = wave
+        tr = self.tracer
 
         tokens = np.zeros((self.n_slots, s), np.int32)
         positions = np.zeros((self.n_slots, s), np.int32)
@@ -1342,28 +1516,36 @@ class ServeScheduler:
         valid = np.zeros((self.n_slots, s), bool)
         seg = np.full((self.n_slots, s), -1, np.int32)
         commit = np.zeros((self.n_slots,), bool)
-        for row, _, u in work:
-            m = len(u.tokens)
-            tokens[row, :m] = u.tokens
-            positions[row, :m] = u.positions
-            is_sum[row, :m] = u.is_sum
-            seg[row, :m] = u.seg
-            valid[row, :m] = True
-            commit[row] = u.commit
+        for row, slot, u in work:
+            with tr.span("prefill_chunk" if u.commit else "burst",
+                         row=row, rid=slot.rid,
+                         tokens=int(len(u.tokens))) if tr.enabled \
+                    else _NULLCTX:
+                m = len(u.tokens)
+                tokens[row, :m] = u.tokens
+                positions[row, :m] = u.positions
+                is_sum[row, :m] = u.is_sum
+                seg[row, :m] = u.seg
+                valid[row, :m] = True
+                commit[row] = u.commit
 
         # async dispatch: p stays on device until this step is harvested
-        p, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(positions), jnp.asarray(is_sum),
-            jnp.asarray(valid), jnp.asarray(commit), jnp.asarray(seg))
-        self.n_steps += 1
-        self._bucket_steps[s] = self._bucket_steps.get(s, 0) + 1
+        ann = (obs_profile.annotate(f"decode.b{int(s)}")
+               if tr.jax_annotate else _NULLCTX)
+        with tr.span("dispatch", bucket=int(s), rows=len(work)), ann:
+            p, self.cache = self._decode(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(positions), jnp.asarray(is_sum),
+                jnp.asarray(valid), jnp.asarray(commit), jnp.asarray(seg))
+        self._c_steps.inc()
+        self._c_bucket[int(s)].inc()
         if any(u.commit for _, _, u in work):
-            self._prefill_steps += 1
+            self._c_prefill_steps.inc()
         qd = len(self._queue)
-        self._qdepth_sum += qd
-        self._qdepth_n += 1
-        self._qdepth_max = max(self._qdepth_max, qd)
+        self._h_qdepth.observe(qd)
+        if tr.enabled:
+            tr.counter("queue_depth", qd)
+            sp.set(bucket=int(s), rows=len(work))
         scheduled = set()
         for row, _, _u in work:
             self._rows[row].last_used = self.n_steps
@@ -1392,10 +1574,11 @@ class ServeScheduler:
         stuck = sorted([s.rid for r in self._rows for s in r.active]
                        + [q[0] for q in self._queue])
         if stuck:
-            self.watchdog_fired += 1
+            self._c_watchdog_fired.inc()
             self.watchdog_stuck_rids = stuck
+            self.tracer.instant("watchdog", stuck_rids=stuck)
         out, self._results = self._results, {}
         return out
 
 
-__all__ = ["ServeScheduler", "RequestResult"]
+__all__ = ["ServeScheduler", "RequestResult", "TELEMETRY_SCHEMA"]

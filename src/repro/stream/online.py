@@ -29,6 +29,8 @@ import numpy as np
 from repro.core.losses import ctr_loss
 from repro.core.metrics import StreamingAUC, StreamingLogLoss
 from repro.models.transformer import ModelConfig, forward
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER
 from repro.train.checkpoint import CheckpointManager
 from repro.train.optimizer import OptimizerConfig
 from repro.train.trainer import (TrainOptions, init_train_state,
@@ -83,7 +85,9 @@ class OnlineTrainer:
                  window_targets: int = 256,
                  history_limit: int = 1000,
                  log_every: int = 0,
-                 log_fn: Callable[[str], None] = print):
+                 log_fn: Callable[[str], None] = print,
+                 tracer=None,
+                 metrics: Optional[MetricsRegistry] = None):
         assert options.grad_accum == 1, (
             "OnlineTrainer needs per-batch p_click for streaming eval; "
             "make_train_step drops aux metrics when grad_accum > 1")
@@ -98,6 +102,19 @@ class OnlineTrainer:
         self.step = 0
         self.published_version: Optional[int] = None
         self._last_publish_step: Optional[int] = None
+        # obs: the registry mirrors what the EvalWindow list / drift()
+        # already expose (the compatibility shim — those APIs stay), in
+        # the mergeable form multi-shard aggregation needs
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._c_steps = self.metrics.counter("online.steps")
+        self._c_targets = self.metrics.counter("online.targets")
+        self._c_windows = self.metrics.counter("online.windows")
+        self._c_publishes = self.metrics.counter("online.publishes")
+        self._g_auc = self.metrics.gauge("online.window_auc")
+        self._g_ll = self.metrics.gauge("online.window_log_loss")
+        self._g_dauc = self.metrics.gauge("online.d_auc")
+        self._g_dll = self.metrics.gauge("online.d_log_loss")
         self.eval_windows: List[EvalWindow] = []
         self.lifetime_auc = StreamingAUC()
         self.lifetime_log_loss = StreamingLogLoss()
@@ -130,6 +147,8 @@ class OnlineTrainer:
             self.publisher.publish(self.step, self.state.params)
             self.published_version = self.step
         self._last_publish_step = self.step
+        self._c_publishes.inc()
+        self.tracer.instant("publish", step=self.step)
 
     # -- metrics --------------------------------------------------------------
 
@@ -143,6 +162,7 @@ class OnlineTrainer:
             acc.update(labels, scores)
         for acc in (self.lifetime_log_loss, self._win_ll):
             acc.update(labels, scores)
+        self._c_targets.inc(int(len(labels)))
         if self._win_auc.n >= self.window_targets:
             self._roll_window()
 
@@ -153,6 +173,15 @@ class OnlineTrainer:
             auc=self._win_auc.value(), log_loss=self._win_ll.value(),
             n_targets=self._win_auc.n, step_lo=self._win_lo,
             step_hi=self.step))
+        self._c_windows.inc()
+        self._g_auc.set(self.eval_windows[-1].auc)
+        self._g_ll.set(self.eval_windows[-1].log_loss)
+        d = self.drift()
+        if d is not None:
+            self._g_dauc.set(d["d_auc"])
+            self._g_dll.set(d["d_log_loss"])
+        self.tracer.instant("window_roll", step=self.step,
+                            auc=self.eval_windows[-1].auc)
         self._win_auc = StreamingAUC()
         self._win_ll = StreamingLogLoss()
         self._win_lo = self.step
@@ -194,9 +223,11 @@ class OnlineTrainer:
             except StopIteration:
                 break
             rng, sub = jax.random.split(rng)
-            self.state, metrics = self.step_fn(self.state, batch, sub)
-            p = np.asarray(metrics["p_click"])
+            with self.tracer.span("online.step", step=self.step + 1):
+                self.state, metrics = self.step_fn(self.state, batch, sub)
+                p = np.asarray(metrics["p_click"])
             self.step += 1
+            self._c_steps.inc()
             self._observe(batch, p)
             rec = {"step": self.step, "loss": float(metrics["loss"])}
             self.history.append(rec)

@@ -28,6 +28,8 @@ from typing import Dict, Iterable, List, Optional, Sequence
 import numpy as np
 
 from repro.core.dti import PromptStats, pack_prompts, prompt_length
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER
 from repro.stream.incremental import IncrementalDTI
 
 _DONE = object()
@@ -41,7 +43,8 @@ class StreamPipeline:
 
     def __init__(self, source: Iterable[List[Dict]], inc: IncrementalDTI, *,
                  batch_size: int, buckets: Optional[Sequence[int]] = None,
-                 pack: bool = True, queue_size: int = 8):
+                 pack: bool = True, queue_size: int = 8,
+                 tracer=None, metrics: Optional[MetricsRegistry] = None):
         assert batch_size > 0
         self.inc = inc
         self.batch_size = batch_size
@@ -51,6 +54,13 @@ class StreamPipeline:
             f"{inc.max_len}")
         self.pack = pack
         self.stats = PromptStats()
+        # worker-thread safe: span emission is a clock read plus a
+        # deque.append (atomic under the GIL), counters a single +=
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._c_ticks = self.metrics.counter("stream.ticks")
+        self._c_rows = self.metrics.counter("stream.rows")
+        self._c_batches = self.metrics.counter("stream.batches")
         self._source = source
         self._q: queue.Queue = queue.Queue(maxsize=queue_size)
         self._err: Optional[BaseException] = None
@@ -76,11 +86,15 @@ class StreamPipeline:
             for tick in self._source:
                 if self._stop.is_set():
                     return
-                rows = self.inc.extend_prompts(tick)
-                if self.pack and rows:
-                    rows = pack_prompts(rows, self.inc.max_len,
-                                        sp=self.inc.sp)
+                with self.tracer.span("stream.tick", events=len(tick)):
+                    rows = self.inc.extend_prompts(tick)
+                    if self.pack and rows:
+                        rows = pack_prompts(rows, self.inc.max_len,
+                                            sp=self.inc.sp)
+                self._c_ticks.inc()
+                self._c_rows.inc(len(rows))
                 for batch in self._batches_from(rows):
+                    self._c_batches.inc()
                     if not self._put(batch):
                         return
         except BaseException as e:  # noqa: BLE001 — surfaced on consumer side

@@ -9,10 +9,11 @@ triggers restore-from-checkpoint with a freshly built mesh — possibly smaller
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Dict, List, Optional
 
 import numpy as np
+
+from repro.obs.clock import monotonic
 
 
 @dataclasses.dataclass
@@ -77,7 +78,9 @@ class FailureSupervisor:
                 return fn()
             except Exception as e:  # noqa: BLE001 — deliberate catch-all
                 self.failures += 1
-                self.events.append({"time": time.time(), "error": repr(e)})
+                # monotonic timestamp: event spacing is what matters here,
+                # and it must survive wall-clock jumps
+                self.events.append({"time": monotonic(), "error": repr(e)})
                 if self.failures > self.max_failures:
                     raise
                 fn = self._resume_wrapper(fn)

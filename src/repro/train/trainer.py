@@ -9,13 +9,14 @@ only in loss_fn), so every paradigm shares one runtime.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable, Dict, Iterator, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.clock import monotonic
+from repro.obs.trace import NULL_TRACER
 from repro.train.checkpoint import CheckpointManager
 from repro.train.optimizer import (OptimizerConfig, OptState, adamw_update,
                                    ef_compress_grads, init_opt_state)
@@ -97,16 +98,39 @@ def make_train_step(loss_fn: Callable, opt_cfg: OptimizerConfig,
 
 @dataclasses.dataclass
 class Trainer:
-    """Step-loop orchestration with checkpoint/restart + straggler signals."""
+    """Step-loop orchestration with checkpoint/restart + straggler signals.
+
+    Timing discipline: the first executed step pays XLA compilation, so
+    folding it into throughput makes tok/s lie on short runs. The loop
+    records it separately (``compile_s``) from the steady-state
+    accumulators (``steady_s`` / ``steady_steps``); ``timing()`` reports
+    both, and ``launch.train`` derives steady tokens/s from the steady
+    half only. Per-step ``sec`` entries in ``history`` are unchanged
+    (the first record still carries its compile-inclusive duration).
+    """
     step_fn: Callable
     state: TrainState
     ckpt: Optional[CheckpointManager] = None
     monitor: Optional[StragglerMonitor] = None
     log_every: int = 10
     log_fn: Callable[[str], None] = print
+    tracer: Any = None                 # repro.obs.trace.SpanTracer or None
 
     step: int = 0
     history: list = dataclasses.field(default_factory=list)
+    compile_s: Optional[float] = None  # first executed step (compile+run)
+    steady_s: float = 0.0              # sum of post-compile step times
+    steady_steps: int = 0
+
+    def timing(self) -> Dict[str, float]:
+        """Compile-vs-steady split of this trainer's executed steps:
+        ``compile_s`` (first step, XLA compile included), ``step_s``
+        (mean steady-state step) and ``steady_steps`` (how many steps
+        back that mean)."""
+        step_s = self.steady_s / self.steady_steps if self.steady_steps \
+            else 0.0
+        return {"compile_s": float(self.compile_s or 0.0),
+                "step_s": step_s, "steady_steps": self.steady_steps}
 
     def resume_if_possible(self):
         if self.ckpt is not None and self.ckpt.latest_step() is not None:
@@ -117,15 +141,22 @@ class Trainer:
     def run(self, batches: Iterator, *, n_steps: int, rng=None,
             host_time_fn: Optional[Callable[[int, float], Dict[int, float]]] = None):
         rng = rng if rng is not None else jax.random.PRNGKey(0)
+        tracer = self.tracer if self.tracer is not None else NULL_TRACER
         target = self.step + n_steps
         for batch in batches:
             if self.step >= target:
                 break
             rng, sub = jax.random.split(rng)
-            t0 = time.perf_counter()
-            self.state, metrics = self.step_fn(self.state, batch, sub)
-            jax.block_until_ready(metrics["loss"])
-            dt = time.perf_counter() - t0
+            t0 = monotonic()
+            with tracer.span("train.step", step=self.step + 1):
+                self.state, metrics = self.step_fn(self.state, batch, sub)
+                jax.block_until_ready(metrics["loss"])
+            dt = monotonic() - t0
+            if self.compile_s is None:
+                self.compile_s = dt
+            else:
+                self.steady_s += dt
+                self.steady_steps += 1
             self.step += 1
             rec = {k: float(v) for k, v in metrics.items()}
             rec.update(step=self.step, sec=dt)
