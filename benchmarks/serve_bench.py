@@ -46,6 +46,16 @@ pages). The run exits nonzero unless int8 retains >= 1.5x the cross-row
 prefix tokens and a strictly higher prefix hit rate than bf16, and both
 runs' scores stay within 0.05 of the fp32 naive oracle.
 
+``--mesh DP,MP`` appends a ``sharded`` block: the same stream drained by a
+fleet of 2 mesh-sharded schedulers (user-routed; KV page pool sharded over
+the ``data`` axis, KV heads over ``model`` — docs/sharding.md) with the
+per-shard ``serve.*`` registries merged into one fleet telemetry snapshot.
+The run exits nonzero if the fleet's scores drift more than 1e-4 from the
+unsharded scheduler drain. On fewer than DP*MP devices the block is still
+emitted on a degenerate (1, 1) mesh (``mesh_fallback: true``); the
+``tier1-multidevice`` CI lane forces 8 host devices for the real (2, 4)
+placement.
+
 ``--trace PATH`` exports the scheduler mode's final drain as a
 Chrome-trace-event JSON (``repro.obs.trace``): nested scheduler-step ->
 prefill-chunk / burst / dispatch spans plus admission / hot-swap /
@@ -91,11 +101,13 @@ from repro.configs import get_arch
 from repro.core.dti import build_sliding_prompts
 from repro.data.requests import make_request_stream
 from repro.data.synthetic import make_ctr_dataset
+from repro.launch.mesh import make_cpu_mesh, make_serve_mesh
 from repro.models.transformer import init_params
 from repro.obs import profile as obs_profile
 from repro.obs.trace import SpanTracer, validate_chrome_trace
 from repro.serve.engine import CTRServer
 from repro.serve.scheduler import ServeScheduler
+from repro.stream.shard import fleet_serve_snapshot, shard_key
 
 
 def _round64(n: int) -> int:
@@ -255,6 +267,61 @@ def run_scheduler(params, cfg, requests, *, n_slots, capacity, buckets,
     return best
 
 
+def run_sharded_fleet(params, cfg, requests, *, n_slots, capacity, buckets,
+                      dp, mp, fleet=2):
+    """The scale-out drain (docs/sharding.md): a fleet of mesh-sharded
+    schedulers splitting the request stream by user, each with its KV page
+    pool sharded over ``data`` and KV heads over ``model``
+    (``ServeScheduler(mesh=...)``). Falls back to the degenerate (1, 1)
+    mesh when the runtime has fewer than ``dp * mp`` devices — the
+    single-device CI job still emits the block, the forced-8-device lane
+    exercises the real (2, 4) placement. Scores come back in submission
+    order so the caller can diff them against the unsharded drain;
+    telemetry is the per-shard ``serve.*`` registries merged into one
+    fleet snapshot (``fleet_serve_snapshot``)."""
+    try:
+        mesh = make_serve_mesh(dp, mp)
+        fallback = False
+    except ValueError:
+        mesh = make_cpu_mesh()
+        fallback = True
+    scheds = [ServeScheduler(params, cfg, n_slots=n_slots,
+                             capacity=capacity, window=cfg.window,
+                             buckets=buckets, mesh=mesh)
+              for _ in range(fleet)]
+    for s in scheds:
+        s.warmup()
+        s.reset_stats()
+    parts = [[] for _ in range(fleet)]
+    for i, r in enumerate(requests):
+        parts[shard_key(r, fleet)].append((i, r))
+    k = len(requests[0]["candidates"])
+    scores = [None] * len(requests)
+    lat, hits, logical = [], 0, 0
+    t0 = time.perf_counter()
+    for s, part in zip(scheds, parts):
+        rids = [s.submit(r["context"], r["candidates"]) for _, r in part]
+        results = s.run()
+        for (i, _), rid in zip(part, rids):
+            scores[i] = results[rid].scores
+            lat.append(results[rid].latency_s)
+            hits += results[rid].cached_tokens
+            logical += results[rid].logical_tokens
+    t_total = time.perf_counter() - t0
+    out = _summary(lat, scores, t_total, len(requests), k,
+                   hit_fraction=hits / max(logical, 1))
+    out["requested_mesh"] = [dp, mp]
+    out["mesh"] = {str(a): int(n) for a, n in mesh.shape.items()}
+    out["mesh_fallback"] = fallback
+    out["devices"] = len(jax.devices())
+    out["fleet"] = fleet
+    out["requests_per_shard"] = [len(p) for p in parts]
+    out["steps"] = sum(s.n_steps for s in scheds)
+    out["decode_impl"] = "dense"
+    out["merged_telemetry"] = fleet_serve_snapshot(scheds)
+    return out
+
+
 def run_quant_compare(params, cfg, requests, *, n_slots, capacity, buckets,
                       arrival_s=0.0, base_pages=16, page_size=16):
     """int8 vs bf16 KV on the revisit drain at an *equal pool byte* budget.
@@ -358,6 +425,17 @@ def main():
                          "python -m repro.launch.obs_report PATH); the "
                          "run exits nonzero if the trace fails schema "
                          "validation or misses the expected span shapes")
+    ap.add_argument("--mesh", default=None, metavar="DP,MP",
+                    help="also run the scale-out drain: a fleet of 2 "
+                         "schedulers splitting the stream by user, each "
+                         "mesh-sharded (KV page pool over 'data', KV heads "
+                         "over 'model') on a (DP, MP) device mesh; emits a "
+                         "'sharded' block with per-shard-merged serve.* "
+                         "telemetry and the max |score delta| vs the "
+                         "unsharded scheduler drain. Falls back to a (1,1) "
+                         "mesh when the runtime has < DP*MP devices (set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count"
+                         "=8 for the real placement)")
     ap.add_argument("--jax-profile", default=None, dest="jax_profile",
                     metavar="DIR",
                     help="also capture a jax.profiler device trace of the "
@@ -543,6 +621,34 @@ def main():
                   f"{t['prefix_hit_rate']:.3f}  evictions "
                   f"{t['page_evictions']}  |dp| {q_deltas[label]:.2e}")
 
+    sharded = None
+    if args.mesh:
+        try:
+            dp, mp = (int(x) for x in args.mesh.split(","))
+        except ValueError:
+            ap.error(f"--mesh expects DP,MP (got {args.mesh!r})")
+        sharded = run_sharded_fleet(
+            params, cfg, requests, n_slots=args.slots, capacity=capacity,
+            buckets=buckets, dp=dp, mp=mp)
+        sh_scores = np.asarray(sharded.pop("scores"))
+        sharded["score_max_abs_delta_vs_unsharded"] = float(np.max(np.abs(
+            sh_scores - np.asarray(all_scores["scheduler"]))))
+        sharded["score_max_abs_delta_vs_naive"] = float(
+            np.max(np.abs(sh_scores - ref)))
+        all_scores["sharded"] = sh_scores
+        result["sharded"] = sharded
+        mt = sharded["merged_telemetry"]
+        print(f"  sharded mesh={sharded['mesh']}"
+              + (" (FALLBACK — wanted "
+                 f"{sharded['requested_mesh']}, "
+                 f"{sharded['devices']} devices)"
+                 if sharded["mesh_fallback"] else "")
+              + f"  fleet={sharded['fleet']} "
+              f"{sharded['candidates_per_s']:8.1f} cand/s  "
+              f"fleet steps {mt['serve.steps']['value']}  "
+              f"|dp vs unsharded| "
+              f"{sharded['score_max_abs_delta_vs_unsharded']:.2e}")
+
     if args.json:
         with open(args.json, "w") as f:
             json.dump(result, f, indent=2)
@@ -620,6 +726,17 @@ def main():
                     f"int8 prefix hit rate {qi['prefix_hit_rate']:.3f} did "
                     f"not beat bf16's {qb['prefix_hit_rate']:.3f} at equal "
                     f"pool bytes")
+    if sharded is not None:
+        # the scale-out acceptance bound (docs/sharding.md): the sharded
+        # fleet's scores must match the single-device scheduler drain —
+        # GSPMD may reorder reductions across shards, nothing more
+        if sharded["score_max_abs_delta_vs_unsharded"] > 1e-4:
+            bad.append(
+                f"sharded drain diverged from unsharded by "
+                f"{sharded['score_max_abs_delta_vs_unsharded']:.2e} "
+                f"(> 1e-4) on mesh {sharded['mesh']}")
+        if sharded["merged_telemetry"]["serve.watchdog_fired"]["value"]:
+            bad.append("sharded: watchdog fired on some shard")
     if bad:
         print(f"[serve_bench] INVALID RUN: {'; '.join(bad)}",
               file=sys.stderr)

@@ -40,4 +40,22 @@ def make_cpu_mesh() -> Mesh:
     return _make_mesh((1, 1), ("data", "model"))
 
 
-__all__ = ["make_production_mesh", "make_cpu_mesh"]
+def make_serve_mesh(dp: int = 2, mp: int = 4) -> Mesh:
+    """``(data, model)`` mesh for the sharded serving/stream lane: the
+    scheduler's paged KV slot axis shards over ``data`` (each shard owns a
+    range of the page pool) and KV heads over ``model`` — see
+    ``repro.sharding.partition.cache_specs`` and docs/sharding.md. Raises
+    when the runtime has fewer than ``dp * mp`` devices; the forced-CPU CI
+    lane provides 8 via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    (which must be set before the first jax import)."""
+    need = dp * mp
+    have = len(jax.devices())
+    if have < need:
+        raise ValueError(
+            f"make_serve_mesh({dp}, {mp}) needs {need} devices, runtime has "
+            f"{have} — set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{need} before importing jax (or use make_cpu_mesh)")
+    return _make_mesh((dp, mp), ("data", "model"))
+
+
+__all__ = ["make_production_mesh", "make_cpu_mesh", "make_serve_mesh"]

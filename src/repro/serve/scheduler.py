@@ -94,6 +94,7 @@ from repro.serve.cache import (adopt_slots, free_slots, init_lm_cache,
                                trim_slots)
 from repro.serve.engine import make_decode_fn
 from repro.serve.pages import PagePool
+from repro.sharding.partition import cache_specs, serve_param_specs
 
 _NULLCTX = nullcontext()
 
@@ -136,6 +137,10 @@ TELEMETRY_SCHEMA: Dict[str, Dict[str, Any]] = {
     "radix_pages": {"kind": "state"},
     "pool_capacity_tokens": {"kind": "config"},
     "pool_bytes": {"kind": "config"},
+    "mesh": {"kind": "config"},
+    "drain_before_swap": {"kind": "config"},
+    "swap_drains": {"kind": "counter", "reset": 0},
+    "swap_drain_steps": {"kind": "counter", "reset": 0},
 }
 
 
@@ -156,6 +161,12 @@ class RequestResult:
     cached_tokens: int                 # logical prompt tokens served from
                                        # cache: logical - (prefill + burst)
     logical_tokens: int                # what k independent prefills compute
+    params_versions: List[Optional[int]] = dataclasses.field(
+        default_factory=list)          # every weight version some work unit
+                                       # of this request was dispatched
+                                       # under, sorted; len > 1 means the
+                                       # request straddled a hot-swap (never
+                                       # happens with drain_before_swap)
 
     @property
     def cache_hit_fraction(self) -> float:
@@ -216,6 +227,9 @@ class _Slot:
                                        # candidate+[SUM] feed
     shared_prefix_tokens: int
     n_candidates: int
+    versions: set = dataclasses.field(default_factory=set)
+                                       # params versions its dispatches ran
+                                       # under (RequestResult.params_versions)
 
 
 @dataclasses.dataclass
@@ -287,6 +301,29 @@ class ServeScheduler:
       drains) increments ``watchdog_fired`` and is recorded in
       ``telemetry()`` — a stalled/never-draining row is a scheduler bug
       surfaced rather than a silent hang.
+
+    Multi-device knobs (docs/sharding.md):
+
+    * ``mesh`` — a ``(data, model)`` ``jax.sharding.Mesh`` (e.g.
+      ``repro.launch.mesh.make_serve_mesh``). The KV cache is committed
+      with ``repro.sharding.partition.cache_specs`` layouts (paged global
+      slot axis over ``data``, KV heads over ``model``, bookkeeping
+      replicated) and params with the whole-head-granular serving TP
+      layout (``serve_param_specs``); the donated decode
+      chain preserves the shardings step over step, so steady-state
+      serving is GSPMD-partitioned with zero per-step resharding. Scores
+      are within reduction-order noise of the unsharded scheduler
+      (tests/test_multihost.py pins <= 1e-4 across the whole
+      dense/pallas x GQA/MLA x contiguous/paged x bf16/int8 matrix).
+    * ``drain_before_swap`` — make ``update_params`` *drain* in-flight
+      work first: admission is suppressed, the pipeline and every active
+      row run to completion under the old weights, and only then do the
+      new weights land. Every request is then scored under exactly one
+      weight version (``RequestResult.params_versions``) — the
+      version-purity contract a fleet-wide hot-swap needs — at the cost
+      of a fleet-visible drain bubble (``swap_drain_steps`` in
+      ``telemetry()``). Default False keeps the documented mixed-version
+      straddle (zero dropped traffic, bounded staleness).
     """
 
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 8,
@@ -303,6 +340,7 @@ class ServeScheduler:
                  watchdog_steps: int = 256,
                  paged: bool = True, page_size: int = 16,
                  n_pages: Optional[int] = None,
+                 mesh=None, drain_before_swap: bool = False,
                  tracer=None):
         if window is None:
             window = cfg.window          # match make_prefill_fn's default
@@ -324,6 +362,9 @@ class ServeScheduler:
         self.overlap = bool(overlap)
         self.watchdog_steps = int(watchdog_steps)
         self.paged = bool(paged)
+        self.mesh = mesh
+        self.drain_before_swap = bool(drain_before_swap)
+        self._in_swap = False
         # observability: a tracer (default no-op) plus the metrics
         # registry backing every counter telemetry() reports. The public
         # counter attributes (`n_steps`, `shared_admissions`, ...) are
@@ -341,6 +382,8 @@ class ServeScheduler:
         self._c_kv_committed = m.counter("serve.kv_bytes_committed")
         self._c_starved = m.counter("serve.prefill_starved_steps")
         self._c_prefill_steps = m.counter("serve.prefill_steps")
+        self._c_swap_drains = m.counter("serve.swap_drains")
+        self._c_swap_drain_steps = m.counter("serve.swap_drain_steps")
         self._c_ctx_done = m.counter("serve.ctx_tokens_done")
         self._c_shared_done = m.counter("serve.shared_tokens_done")
         self._c_bucket = {int(b): m.counter(f"serve.bucket_steps.{int(b)}")
@@ -391,6 +434,21 @@ class ServeScheduler:
         self._kv_token_bytes = kv_token_bytes(self.cache)
         if self.paged:
             self._pool.token_bytes = self._kv_token_bytes
+        # multi-device placement: commit the cache under the serving layout
+        # (paged slot axis over data, KV heads over model — `cache_specs`)
+        # and params under the whole-head-granular serving TP layout
+        # (`serve_param_specs`). Donation keeps the layouts across the step
+        # chain; host->device uploads that rebind a cache leaf
+        # (`_flush_row_ops`'s page-table sync) must re-commit with the
+        # same sharding or every sync would change the jit signature and
+        # recompile the decode step.
+        self._cache_shardings = None
+        self._param_specs = None
+        if mesh is not None:
+            self._cache_shardings = cache_specs(self.cache, mesh)
+            self.cache = jax.device_put(self.cache, self._cache_shardings)
+            self._param_specs = serve_param_specs(self.params, cfg, mesh)
+            self.params = jax.device_put(self.params, self._param_specs)
         self._queue: deque = deque()
         self._rows: List[_Row] = [_Row() for _ in range(n_slots)]
         self._trie = RadixTree(page_size=self.page_size or 0)
@@ -530,6 +588,14 @@ class ServeScheduler:
             "kv_bytes": int(kv_cache_bytes(self.cache)),
             "kv_token_bytes": float(self._kv_token_bytes),
             "kv_bytes_committed": int(self._c_kv_committed.value),
+            # multi-device: the serving mesh's axis sizes (None when
+            # unsharded) and the hot-swap drain policy + its cost
+            "mesh": (None if self.mesh is None
+                     else {str(k): int(v)
+                           for k, v in self.mesh.shape.items()}),
+            "drain_before_swap": bool(self.drain_before_swap),
+            "swap_drains": int(self._c_swap_drains.value),
+            "swap_drain_steps": int(self._c_swap_drain_steps.value),
         }
         if self.paged:
             out.update({
@@ -642,8 +708,30 @@ class ServeScheduler:
         after any in-flight chunk, the cache data dependency orders it)
         and the committer re-commits its full context from position 0
         under the new weights. Chunked and monolithic prefill therefore
-        score identically across a mid-prefill swap."""
+        score identically across a mid-prefill swap.
+
+        With ``drain_before_swap=True`` none of the straddle/restart
+        machinery is reachable: in-flight work is drained first (admission
+        suppressed, queued requests wait), so the swap lands on idle rows
+        and every request's KV — and every score — comes from exactly one
+        weight version."""
+        if self.drain_before_swap and not self._in_swap and (
+                self._inflight or any(r.active for r in self._rows)):
+            self._in_swap = True       # suppress admission + source polling
+            try:
+                drained = 0
+                while self._inflight or any(r.active for r in self._rows):
+                    if not self.step():
+                        break
+                    drained += 1
+                self._c_swap_drains.inc()
+                self._c_swap_drain_steps.inc(drained)
+                self.tracer.instant("swap_drain", steps=drained)
+            finally:
+                self._in_swap = False
         self.tracer.instant("hot_swap", version=version)
+        if self._param_specs is not None:
+            params = jax.device_put(params, self._param_specs)
         self.params = params
         if version is not None:
             self.params_version = version
@@ -969,8 +1057,14 @@ class ServeScheduler:
         if p["retain"].any():
             self.cache = self._retain(self.cache, jnp.asarray(p["retain"]))
         if self.paged and self._tables_dirty:
-            self.cache = dict(self.cache,
-                              page_table=jnp.asarray(self._tables))
+            # re-upload under the committed sharding: an uncommitted
+            # asarray would change the decode jit's input-sharding
+            # signature and force a recompile every sync
+            pt = (jnp.asarray(self._tables)
+                  if self._cache_shardings is None else
+                  jax.device_put(self._tables,
+                                 self._cache_shardings["page_table"]))
+            self.cache = dict(self.cache, page_table=pt)
             self._tables_dirty = False
         self._pending = self._fresh_pending()
 
@@ -1381,7 +1475,9 @@ class ServeScheduler:
             burst_tokens=slot.burst_tokens,
             shared_prefix_tokens=slot.shared_prefix_tokens,
             cached_tokens=logical_tokens - computed,
-            logical_tokens=logical_tokens)
+            logical_tokens=logical_tokens,
+            params_versions=sorted(slot.versions,
+                                   key=lambda v: (v is not None, v)))
         if self.tracer.enabled:
             self.tracer.instant("finish", rid=slot.rid, row=slot.row)
         r.active.remove(slot)
@@ -1475,9 +1571,11 @@ class ServeScheduler:
             return self._step_impl(sp)
 
     def _step_impl(self, sp) -> bool:
-        if self._param_source is not None:
+        if self._param_source is not None and not self._in_swap:
             # dedicated counter: n_steps stalls on idle calls, which would
-            # either re-poll every call or never poll again
+            # either re-poll every call or never poll again. Polling is
+            # suppressed inside a drain-before-swap (its steps run under
+            # the old weights by construction).
             if self._poll_tick % self._poll_every == 0:
                 update = self._param_source()
                 if update is not None:
@@ -1494,7 +1592,7 @@ class ServeScheduler:
                 self._inflight[0][0].is_ready()
                 or (self._queue and self._inflight[0][2])):
             self._harvest_one()
-        if self._queue:
+        if self._queue and not self._in_swap:   # drains admit nothing
             with self.tracer.span("admit"):
                 while self._queue:
                     rid, ctx, cands, t0 = self._queue[0]
@@ -1517,6 +1615,10 @@ class ServeScheduler:
         seg = np.full((self.n_slots, s), -1, np.int32)
         commit = np.zeros((self.n_slots,), bool)
         for row, slot, u in work:
+            # the version whose weights compute this unit — what
+            # RequestResult.params_versions reports (a one-element list
+            # under drain_before_swap, the purity assertion in tests)
+            slot.versions.add(self.params_version)
             with tr.span("prefill_chunk" if u.commit else "burst",
                          row=row, rid=slot.rid,
                          tokens=int(len(u.tokens))) if tr.enabled \

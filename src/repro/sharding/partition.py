@@ -231,6 +231,104 @@ LM_EP_TP_RULES: List[Rule] = [r for r in LM_TP_RULES
 ]
 
 
+# ===========================================================================
+# Serving-cache layout (decode KV caches, repro.serve.cache)
+# ===========================================================================
+
+# Leaf-key -> axis template for the two cache layouts. Templates are matched
+# by exact key (the cache is a flat dict, not a nested pytree) and resolved
+# through ``spec_for_shape`` so the usual safety passes apply: an axis entry
+# is dropped when the dim is not divisible (n_kv_heads=2 on a model=4 mesh
+# serves replicated heads instead of failing the compile), and "data"
+# resolves to ("pod", "data") on a multi-pod mesh.
+#
+# Paged caches carry one *global* slot axis shared by every row —
+# ``k/v (L, n_tot, Hk, d)`` — which shards over "data": each data shard owns
+# a contiguous range of the page pool, and the page-table gather crosses
+# shards only when a row's pages actually land on another shard (GSPMD
+# inserts the collective). Contiguous caches shard their row axis
+# ``(L, B, cap, ...)`` over "data" instead. KV heads shard over "model" in
+# both layouts; the int8 scale sidecars ride the same axes as their codes,
+# so a page stays self-describing per shard. Bookkeeping (``pos``,
+# ``cursor``, ``ref``, ``page_table``) is replicated: it is host-mirrored
+# int32 state that every shard's decode step reads in full.
+_CACHE_PAGED_TPL: Dict[str, Tuple[AxisEntry, ...]] = {
+    "k":         (None, "data", "model", None),
+    "v":         (None, "data", "model", None),
+    "k_scale":   (None, "data", "model"),
+    "v_scale":   (None, "data", "model"),
+    "ckv":       (None, "data", None),
+    "kpe":       (None, "data", None),
+    "ckv_scale": (None, "data"),
+    "kpe_scale": (None, "data"),
+}
+_CACHE_CONTIG_TPL: Dict[str, Tuple[AxisEntry, ...]] = {
+    "k":         (None, "data", None, "model", None),
+    "v":         (None, "data", None, "model", None),
+    "k_scale":   (None, "data", None, "model"),
+    "v_scale":   (None, "data", None, "model"),
+    "ckv":       (None, "data", None, None),
+    "kpe":       (None, "data", None, None),
+    "ckv_scale": (None, "data", None),
+    "kpe_scale": (None, "data", None),
+}
+
+
+def cache_specs(cache: Any, mesh: Mesh) -> Dict[str, NamedSharding]:
+    """NamedSharding per cache-dict key (concrete cache or ``cache_shape``
+    spec): the serving-side layout policy. KV codes and scale sidecars
+    shard their slot axis over "data" and the kv-head axis over "model"
+    (divisibility permitting); bookkeeping replicates. The donated decode
+    chain keeps these shardings step over step, so committing the cache
+    once at scheduler construction pins the whole serving run's layout."""
+    paged = "page_table" in cache
+    tpl = _CACHE_PAGED_TPL if paged else _CACHE_CONTIG_TPL
+    out: Dict[str, NamedSharding] = {}
+    for key, leaf in cache.items():
+        t = tpl.get(key, ())
+        out[key] = NamedSharding(mesh, spec_for_shape(leaf.shape, t, mesh))
+    return out
+
+
+def serve_param_specs(params: Any, cfg, mesh: Mesh) -> Any:
+    """LM TP specs restricted to *whole-head* granularity on the attention
+    projections — the serving-side param layout.
+
+    The generic divisibility pass checks the fused ``heads * head_dim``
+    projection axis (64 for 2 kv heads of 32), which a model=4 axis splits
+    into *half heads*. RoPE then mixes elements across the shard boundary
+    inside each head, and that rotate-half pattern on a sub-head shard
+    miscompiles under GSPMD on CPU (jax 0.4.37): a forward pass with only
+    ``attn.k.w`` sharded 4-ways drifts by ~1e-1 while whole-head shardings
+    (q with 4 heads, or k on a model=2 axis) match the replicated run to
+    float32 noise. So here an attention projection keeps its "model" axis
+    only when the *head count* divides the axis size; everything else
+    (embed, lm_head, ffn) keeps the plain TP layout. Non-GQA attention
+    (MLA's low-rank stacks carry their own rope sub-blocks) replicates the
+    whole attn subtree for the same reason."""
+    specs = make_param_specs(params, rules_for("lm", "tp"), mesh)
+    size = mesh.shape.get("model", 1)
+    if size == 1:
+        return specs
+
+    def heads(proj: str) -> int:
+        return cfg.n_heads if proj in ("q", "o") else cfg.n_kv_heads
+
+    def fix(kp, sharding):
+        keys = [getattr(k, "key", str(k)) for k in kp]
+        if "attn" not in keys:
+            return sharding
+        if cfg.attn_type != "gqa":
+            return NamedSharding(mesh, P())
+        i = keys.index("attn")
+        proj = keys[i + 1] if i + 1 < len(keys) else ""
+        if proj in ("q", "k", "v", "o") and heads(proj) % size == 0:
+            return sharding
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(fix, specs)
+
+
 def rules_for(family: str, profile: str = "tp") -> List[Rule]:
     if family == "lm":
         return {"tp": LM_TP_RULES, "fsdp_tp": LM_FSDP_TP_RULES,
@@ -244,4 +342,5 @@ def rules_for(family: str, profile: str = "tp") -> List[Rule]:
 
 __all__ = ["make_param_specs", "zero1_specs", "batch_spec", "data_axis",
            "dp_size", "spec_for_shape", "rules_for", "leaf_path_str",
+           "cache_specs", "serve_param_specs",
            "LM_TP_RULES", "LM_FSDP_TP_RULES", "RECSYS_RULES", "GNN_RULES"]

@@ -10,8 +10,15 @@ from repro.stream.incremental import IncrementalDTI
 from repro.stream.online import EvalWindow, OnlineTrainer, make_stream_loss_fn
 from repro.stream.pipeline import StreamPipeline
 from repro.stream.prewarm import PrefixPrewarmer
-from repro.stream.publish import ParamPublisher, ParamSubscriber
+from repro.stream.publish import (LocalDirStore, ObjectStore, ParamPublisher,
+                                  ParamSubscriber, replicated_subscribers)
+from repro.stream.shard import (fleet_eval, fleet_serve_snapshot,
+                                merged_streaming_auc,
+                                merged_streaming_log_loss, shard_events)
 
 __all__ = ["IncrementalDTI", "StreamPipeline", "OnlineTrainer", "EvalWindow",
            "make_stream_loss_fn", "ParamPublisher", "ParamSubscriber",
+           "ObjectStore", "LocalDirStore", "replicated_subscribers",
+           "shard_events", "merged_streaming_auc", "merged_streaming_log_loss",
+           "fleet_eval", "fleet_serve_snapshot",
            "PrefixPrewarmer"]

@@ -1,66 +1,163 @@
 """Weight publication: online trainer -> serving fleet, no restarts.
 
-Transport is the checkpoint store (``repro.train.checkpoint``): the
-publisher writes params-only versions with the same atomic
-``tmp.<v>`` -> ``os.replace`` -> ``step_<v>`` protocol, so a subscriber
-polling the directory only ever sees complete versions — a crash mid-write
-never publishes a torn checkpoint. Versions are the online trainer's step
-numbers: monotonic, so ``poll`` is a single ``latest_step`` check.
+Transport is an ``ObjectStore`` — a minimal versioned-blob interface with
+one backend today (``LocalDirStore``, over ``repro.train.checkpoint``'s
+atomic ``tmp.<v>`` -> ``os.replace`` -> ``step_<v>`` protocol) and room for
+remote stores later; the publisher/subscriber pair never touches paths
+directly, so swapping the backend swaps the fleet's transport. Versions are
+the online trainer's step numbers: monotonic, so ``poll`` is one listing.
+
+Fleet semantics (docs/sharding.md):
+
+* **one store, many subscribers** — every serving shard runs its own
+  ``ParamSubscriber`` over the shared store (``replicated_subscribers``),
+  each with an independent cursor, so shards converge on the newest
+  version without coordinating with each other.
+* **fault tolerance** — ``poll`` *skips* unreadable versions instead of
+  raising: a torn/partial write (only reachable if the backend loses the
+  atomic-replace guarantee, e.g. a copied-in checkpoint or a crashed
+  remote store) or a version GC'd between listing and read falls back to
+  the next-newest good version, or to None (keep serving the current
+  weights). Skipped versions are remembered (``skipped``) and never
+  re-read. A *gap* in the version sequence is not an error — subscribers
+  only care about the newest readable version.
 
 Consumers:
 
 * ``ServeScheduler.attach_param_source(sub.poll)`` — the continuous-
   batching scheduler polls between decode steps and swaps params in place.
-  In-flight slots are NOT dropped: their already-cached context KV stays
-  (computed under the old weights), only subsequent steps use the new
-  ones, so a request straddling a swap is scored under mixed versions —
-  bounded staleness traded for zero dropped traffic (docs/streaming.md).
+  By default in-flight slots are NOT dropped: their already-cached context
+  KV stays (computed under the old weights), so a request straddling a
+  swap is scored under mixed versions — bounded staleness traded for zero
+  dropped traffic (docs/streaming.md). ``drain_before_swap=True`` trades
+  a drain bubble for version purity instead (docs/sharding.md).
 * ``CTRServer.update_params`` — prefill-path hot-swap; params are a jit
   *argument*, so swapping triggers no recompilation in either consumer.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, List, Optional, Tuple, Union
 
 from repro.train.checkpoint import CheckpointManager
 
 
-class ParamPublisher:
-    """Writes versioned params; ``keep`` old versions survive so slow
+class ObjectStore:
+    """Versioned object store: integer versions -> pytrees of arrays.
+
+    ``put`` must be atomic (a reader never sees a half-written version) and
+    ``versions`` must list only complete versions — the two properties the
+    subscriber protocol rides on. ``get`` may raise on a version that is
+    corrupt or vanished (GC race); callers are expected to fall back.
+    """
+
+    def put(self, version: int, obj: Any) -> None:
+        raise NotImplementedError
+
+    def get(self, template: Any, version: int) -> Any:
+        raise NotImplementedError
+
+    def versions(self) -> List[int]:
+        raise NotImplementedError
+
+    def latest(self) -> Optional[int]:
+        vs = self.versions()
+        return vs[-1] if vs else None
+
+
+class LocalDirStore(ObjectStore):
+    """Local-directory backend over ``CheckpointManager``: atomic writes
+    via tmp-dir + ``os.replace``, ``keep`` newest versions retained so slow
     subscribers never watch their version vanish mid-restore."""
 
     def __init__(self, directory: str, *, keep: int = 3):
+        self.directory = directory
         self.mgr = CheckpointManager(directory, keep=keep, save_interval=1,
                                      async_write=False)
 
+    def put(self, version: int, obj: Any) -> None:
+        self.mgr.save(version, obj, meta={"version": version}, block=True)
+
+    def get(self, template: Any, version: int) -> Any:
+        return self.mgr.restore(template, step=version)
+
+    def versions(self) -> List[int]:
+        return self.mgr.all_steps()
+
+
+def _as_store(store: Union[str, ObjectStore], **kw) -> ObjectStore:
+    return store if isinstance(store, ObjectStore) else \
+        LocalDirStore(store, **kw)
+
+
+class ParamPublisher:
+    """Writes versioned params to an ``ObjectStore`` (or a directory path,
+    the historical constructor — wrapped in a ``LocalDirStore``)."""
+
+    def __init__(self, store: Union[str, ObjectStore], *, keep: int = 3):
+        self.store = _as_store(store, keep=keep) \
+            if isinstance(store, str) else store
+
     def publish(self, version: int, params: Any) -> None:
-        self.mgr.save(version, params, meta={"version": version}, block=True)
+        self.store.put(version, params)
 
     def latest_version(self) -> Optional[int]:
-        return self.mgr.latest_step()
+        return self.store.latest()
 
 
 class ParamSubscriber:
-    """Polls a publisher directory; returns ``(version, params)`` when a
-    newer version than the last one seen exists, else None. ``template``
-    pins the expected pytree structure/shapes (shape drift is rejected by
-    the checkpoint layer, not silently loaded)."""
+    """Polls an ``ObjectStore``; returns ``(version, params)`` when a newer
+    *readable* version than the last one seen exists, else None.
+    ``template`` pins the expected pytree structure/shapes (shape drift is
+    rejected by the store's codec, not silently loaded).
 
-    def __init__(self, directory: str, template: Any, *,
+    ``poll`` never raises on store-side faults: unreadable versions land in
+    ``skipped`` and the scan falls back toward the newest good version —
+    a serving shard keeps scoring under its current weights rather than
+    crashing on a bad publish."""
+
+    def __init__(self, store: Union[str, ObjectStore], template: Any, *,
                  version: Optional[int] = None):
-        self.mgr = CheckpointManager(directory, save_interval=1,
-                                     async_write=False)
+        self.store = _as_store(store)
         self.template = template
         self.version = -1 if version is None else version
+        self.skipped: List[int] = []
+        self._bad: set = set()
 
     def poll(self) -> Optional[Tuple[int, Any]]:
-        latest = self.mgr.latest_step()
-        if latest is None or latest <= self.version:
-            return None
-        params = self.mgr.restore(self.template, step=latest)
-        self.version = latest
-        self.template = params
-        return latest, params
+        try:
+            vs = self.store.versions()
+        except OSError:
+            return None                    # store unreachable: keep serving
+        for v in reversed(vs):
+            if v <= self.version:
+                break
+            if v in self._bad:
+                continue
+            try:
+                params = self.store.get(self.template, v)
+            except Exception:              # torn write / GC race: skip it
+                self._bad.add(v)
+                self.skipped.append(v)
+                continue
+            self.version = v
+            self.template = params
+            return v, params
+        return None
 
 
-__all__ = ["ParamPublisher", "ParamSubscriber"]
+def replicated_subscribers(store: Union[str, ObjectStore], template: Any,
+                           n: int, *, version: Optional[int] = None
+                           ) -> List[ParamSubscriber]:
+    """``n`` independent subscribers over one shared store — one per
+    serving shard. Each keeps its own cursor (and its own restored copy of
+    the params), so a fleet-wide publish reaches every shard on its next
+    poll without any cross-shard coordination; pair with
+    ``ServeScheduler(drain_before_swap=True)`` for a fleet-wide
+    version-pure swap."""
+    st = _as_store(store)
+    return [ParamSubscriber(st, template, version=version)
+            for _ in range(n)]
+
+
+__all__ = ["ObjectStore", "LocalDirStore", "ParamPublisher",
+           "ParamSubscriber", "replicated_subscribers"]

@@ -1,0 +1,208 @@
+"""ObjectStore publish/subscribe fault injection, and version-pure swaps.
+
+The publisher/subscriber contract (``repro.stream.publish``): a serving
+shard must keep scoring no matter what the store does — a torn write, a
+GC'd version, a gap in the sequence, an unreachable store — and a fleet
+configured with ``drain_before_swap`` must never score one request under
+two weight versions. Each fault here is injected the way it happens in
+production (a truncated ``arrays.npz`` behind an intact ``meta.json`` is
+exactly what a crashed copy leaves), and each regression test pins
+behavior that the pre-fix code got wrong: ``poll`` used to propagate the
+``np.load`` failure, and a no-drain scheduler demonstrably mixes versions
+inside a straddling request.
+
+Runs on one device — the multi-device fleet versions live in
+tests/test_multihost.py.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models.transformer import init_params
+from repro.serve.scheduler import ServeScheduler
+from repro.stream.publish import (LocalDirStore, ObjectStore, ParamPublisher,
+                                  ParamSubscriber)
+
+from test_serve import _cfg, _request_material
+
+
+def _params(seed, cfg):
+    return init_params(jax.random.PRNGKey(seed), cfg)
+
+
+def _tree_equal(a, b):
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_array_equal(np.asarray(x),
+                                                   np.asarray(y)), a, b)
+
+
+def _corrupt_arrays(directory, version):
+    """A torn write: the array payload is truncated but ``meta.json``
+    survives, so the version still lists as complete."""
+    path = os.path.join(directory, f"step_{version:010d}", "arrays.npz")
+    with open(path, "r+b") as f:
+        f.truncate(16)
+    return path
+
+
+class TestStoreFaults:
+
+    def test_torn_write_is_skipped_not_raised(self, tmp_path):
+        """A corrupt newest version must not take the subscriber down
+        (pre-fix ``poll`` propagated the load error): it lands in
+        ``skipped`` and the subscriber falls back to the newest *good*
+        version in the same poll."""
+        cfg = _cfg()
+        p0, p1 = _params(0, cfg), _params(1, cfg)
+        pub = ParamPublisher(str(tmp_path))
+        pub.publish(0, p0)
+        pub.publish(1, p1)
+        _corrupt_arrays(str(tmp_path), 1)
+
+        sub = ParamSubscriber(str(tmp_path), p0)
+        got = sub.poll()
+        assert got is not None and got[0] == 0
+        _tree_equal(got[1], p0)
+        assert sub.skipped == [1]
+
+    def test_bad_version_never_reread_and_recovery(self, tmp_path):
+        """After skipping a torn version the subscriber neither re-reads it
+        on later polls nor gets stuck: the next good publish delivers."""
+        cfg = _cfg()
+        p0, p2 = _params(0, cfg), _params(2, cfg)
+        pub = ParamPublisher(str(tmp_path))
+        pub.publish(0, p0)
+        pub.publish(1, _params(1, cfg))
+        _corrupt_arrays(str(tmp_path), 1)
+
+        sub = ParamSubscriber(str(tmp_path), p0, version=0)
+        assert sub.poll() is None            # only the torn v1 is newer
+        assert sub.poll() is None            # not re-read, not raised
+        assert sub.skipped == [1]
+        pub.publish(2, p2)
+        got = sub.poll()
+        assert got is not None and got[0] == 2
+        _tree_equal(got[1], p2)
+
+    def test_version_gap_is_not_an_error(self, tmp_path):
+        """Versions need not be consecutive (keep-k GC, skipped publishes):
+        the subscriber simply takes the newest readable one."""
+        cfg = _cfg()
+        p0, p5 = _params(0, cfg), _params(5, cfg)
+        pub = ParamPublisher(str(tmp_path))
+        pub.publish(0, p0)
+        pub.publish(5, p5)
+
+        sub = ParamSubscriber(str(tmp_path), p0)
+        got = sub.poll()
+        assert got is not None and got[0] == 5
+        assert sub.poll() is None
+
+    def test_unreachable_store_keeps_serving(self):
+        """A store whose listing itself fails (network mount gone) polls as
+        None — the shard keeps its current weights."""
+
+        class DownStore(ObjectStore):
+            def versions(self):
+                raise OSError("store unreachable")
+
+        sub = ParamSubscriber(DownStore(), template=None)
+        assert sub.poll() is None
+
+    def test_keep_k_gc_never_strands_a_slow_subscriber(self, tmp_path):
+        """Publishing past ``keep`` GCs old versions; a subscriber that
+        slept through all of them still lands on the newest survivor."""
+        cfg = _cfg()
+        ps = [_params(i, cfg) for i in range(5)]
+        store = LocalDirStore(str(tmp_path), keep=2)
+        pub = ParamPublisher(store)
+        for i, p in enumerate(ps):
+            pub.publish(i, p)
+        assert store.versions() == [3, 4]
+        sub = ParamSubscriber(store, ps[0])
+        got = sub.poll()
+        assert got is not None and got[0] == 4
+        _tree_equal(got[1], ps[4])
+
+
+class TestDrainBeforeSwap:
+
+    def _mid_flight(self, cfg, p_old, **kw):
+        """A scheduler with one request genuinely straddling a swap: the
+        single-token buckets force one decode dispatch per candidate, so
+        after one step the remaining candidates are still in flight."""
+        sched = ServeScheduler(p_old, cfg, n_slots=2, capacity=64,
+                               buckets=(8,), **kw)
+        ctx, cands = _request_material(seed=11, n_ctx=4, k=6)
+        rid = sched.submit(ctx, cands)
+        sched.step()
+        assert any(r.active for r in sched._rows)
+        return sched, rid
+
+    def test_no_drain_mixes_versions(self):
+        """The failure mode, demonstrated: without draining, a request in
+        flight across ``update_params`` scores some candidates under each
+        version — its KV context was built under the old weights and kept.
+        This is the bounded-staleness default, and exactly what
+        ``drain_before_swap`` exists to forbid."""
+        cfg = _cfg()
+        sched, rid = self._mid_flight(cfg, _params(0, cfg))
+        sched.update_params(_params(1, cfg), version=1)
+        res = sched.run()[rid]
+        assert res.params_versions == [None, 1]
+
+    def test_drain_before_swap_is_version_pure(self):
+        """With ``drain_before_swap=True`` the same straddling request is
+        finished under the old weights before the swap lands: every result
+        reports exactly one version, and the drain is visible in
+        telemetry."""
+        cfg = _cfg()
+        sched, rid = self._mid_flight(cfg, _params(0, cfg),
+                                      drain_before_swap=True)
+        sched.update_params(_params(1, cfg), version=1)
+        res = sched.run()[rid]
+        assert res.params_versions == [None]
+        assert sched.params_version == 1
+        tel = sched.telemetry()
+        assert tel["swap_drains"] == 1
+        assert tel["swap_drain_steps"] >= 1
+        # and the swap still took: new work scores under the new weights
+        ctx, cands = _request_material(seed=12, n_ctx=3, k=2)
+        rid2 = sched.submit(ctx, cands)
+        assert sched.run()[rid2].params_versions == [1]
+
+    def test_drained_scores_equal_undisturbed_old_params_run(self):
+        """Version purity is also *value* purity: the drained request's
+        scores are exactly what an undisturbed old-params scheduler
+        produces — the swap contributed nothing to them."""
+        cfg = _cfg()
+        p_old = _params(0, cfg)
+        sched, rid = self._mid_flight(cfg, p_old, drain_before_swap=True)
+        sched.update_params(_params(1, cfg), version=1)
+        got = sched.run()[rid].scores
+
+        plain = ServeScheduler(p_old, cfg, n_slots=2, capacity=64,
+                               buckets=(8,))
+        ctx, cands = _request_material(seed=11, n_ctx=4, k=6)
+        rid2 = plain.submit(ctx, cands)
+        want = plain.run()[rid2].scores
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_subscriber_poll_inside_drain_does_not_recurse(self, tmp_path):
+        """``drain_before_swap``'s drain loop runs ``step()``, which polls
+        the param source; a publish already sitting in the store must not
+        re-enter ``update_params`` mid-drain (the ``_in_swap`` guard) —
+        the drain finishes, then exactly one swap lands."""
+        cfg = _cfg()
+        p0, p1 = _params(0, cfg), _params(1, cfg)
+        pub = ParamPublisher(str(tmp_path))
+        sched, rid = self._mid_flight(cfg, p0, drain_before_swap=True)
+        pub.publish(1, p1)
+        sub = ParamSubscriber(str(tmp_path), p0)
+        sched.attach_param_source(sub.poll, poll_every=1)
+        res = sched.run()[rid]
+        assert res.params_versions == [None]
+        assert sched.params_version == 1
+        assert sched.telemetry()["swap_drains"] == 1

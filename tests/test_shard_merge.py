@@ -1,0 +1,170 @@
+"""Shard-and-merge exactness: the properties the fleet aggregation rides on.
+
+``repro.stream.shard`` claims its aggregation is *exact*, not approximate:
+partition a stream over any number of shards, accumulate per shard, merge —
+and you get the single-shard value of the unpartitioned stream, to the
+float. These hypothesis properties pin that claim for every merged
+quantity: ``StreamingAUC`` / ``StreamingLogLoss`` (the eval side),
+``shard_events`` routing (the stream side), and merged ``serve.*``-style
+registry snapshots (the serve side). If any of these drifted from exact,
+fleet dashboards would silently disagree with single-host reruns.
+"""
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.core.metrics import StreamingAUC, StreamingLogLoss
+from repro.obs.metrics import MetricsRegistry, merge_snapshots
+from repro.stream.shard import (fleet_serve_snapshot, merged_streaming_auc,
+                                merged_streaming_log_loss, shard_events,
+                                shard_key)
+
+# one observation: (user id, label, score)
+_OBS = st.tuples(st.integers(0, 50), st.integers(0, 1),
+                 st.floats(0.0, 1.0, allow_nan=False))
+
+
+def _accumulate(cls_kwargs, cls, obs):
+    acc = cls(**cls_kwargs)
+    if obs:
+        _, labels, scores = zip(*obs)
+        acc.update(labels, scores)
+    return acc
+
+
+@pytest.mark.hyp
+@settings(max_examples=60, deadline=None)
+@given(st.lists(_OBS, max_size=60), st.integers(1, 7))
+def test_sharded_auc_merges_to_global(obs, n_shards):
+    """Routing observations by user over any shard count and merging the
+    per-shard AUC accumulators reproduces the global AUC *bit-exactly*
+    (integer bin histograms add — no float path at all)."""
+    global_acc = _accumulate({}, StreamingAUC, obs)
+    shards = [
+        _accumulate({}, StreamingAUC,
+                    [o for o in obs if shard_key({"user": o[0]},
+                                                 n_shards) == s])
+        for s in range(n_shards)]
+    merged = merged_streaming_auc(shards)
+    np.testing.assert_array_equal(merged.pos, global_acc.pos)
+    np.testing.assert_array_equal(merged.neg, global_acc.neg)
+    assert merged.value() == global_acc.value()
+    # inputs must not have been mutated (shards keep accumulating)
+    assert sum(int(s.n) for s in shards) == global_acc.n == merged.n
+
+
+@pytest.mark.hyp
+@settings(max_examples=60, deadline=None)
+@given(st.lists(_OBS, max_size=60), st.integers(1, 7))
+def test_sharded_log_loss_merges_to_global(obs, n_shards):
+    """Per-shard log-loss sums merge to the global sum up to float
+    re-association (each observation's term is computed identically; only
+    the addition order differs across shard partitions)."""
+    global_acc = _accumulate({}, StreamingLogLoss, obs)
+    shards = [
+        _accumulate({}, StreamingLogLoss,
+                    [o for o in obs if shard_key({"user": o[0]},
+                                                 n_shards) == s])
+        for s in range(n_shards)]
+    merged = merged_streaming_log_loss(shards)
+    assert merged.n == global_acc.n
+    np.testing.assert_allclose(merged.total, global_acc.total,
+                               rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.hyp
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.lists(st.tuples(st.integers(0, 50), st.integers(0, 1)),
+                         max_size=6),
+                max_size=8),
+       st.integers(1, 5))
+def test_shard_events_partitions_exactly(ticks, n_shards):
+    """``shard_events`` is a partition, not a resample: every event lands
+    on exactly one shard (the one its user hashes to), tick alignment is
+    preserved on every shard, and within-tick order survives."""
+    streams = [[{"user": u, "label": y} for u, y in tick] for tick in ticks]
+    shards = shard_events(streams, n_shards)
+    assert len(shards) == n_shards
+    for s, shard in enumerate(shards):
+        assert len(shard) == len(streams)          # tick-aligned
+        for tick in shard:
+            for e in tick:
+                assert shard_key(e, n_shards) == s
+    for t, tick in enumerate(streams):             # nothing lost, order kept
+        for s in range(n_shards):
+            mine = [e for e in tick if shard_key(e, n_shards) == s]
+            assert shards[s][t] == mine
+
+
+# per-shard registry activity: (counter increments, gauge value,
+# histogram observations)
+_SHARD_OPS = st.tuples(st.lists(st.integers(0, 100), max_size=5),
+                       st.floats(0, 1e6, allow_nan=False),
+                       st.lists(st.floats(0, 100, allow_nan=False),
+                                max_size=5))
+
+
+def _registry(ops):
+    (incs, gauge, hist) = ops
+    m = MetricsRegistry()
+    c = m.counter("serve.steps")
+    for i in incs:
+        c.inc(i)
+    m.gauge("serve.queue_depth_now").set(gauge)
+    h = m.histogram("serve.step_ms", bounds=(1.0, 10.0, 100.0))
+    for v in hist:
+        h.observe(v)
+    return m
+
+
+class _Sched:
+    """The duck type ``fleet_serve_snapshot`` consumes: anything with a
+    ``metrics`` registry."""
+
+    def __init__(self, metrics):
+        self.metrics = metrics
+
+
+@pytest.mark.hyp
+@settings(max_examples=60, deadline=None)
+@given(st.lists(_SHARD_OPS, min_size=1, max_size=5),
+       st.randoms(use_true_random=False))
+def test_fleet_serve_snapshot_equals_global_registry(shard_ops, rnd):
+    """Merged per-shard ``serve.*`` snapshots equal the snapshot of one
+    registry that saw every shard's activity — counters and histograms
+    exactly; the gauge resolves to the max over ``(seq, value)``, which is
+    what a fleet point-in-time gauge means. Shard order must not matter."""
+    scheds = [_Sched(_registry(ops)) for ops in shard_ops]
+    merged = fleet_serve_snapshot(scheds)
+    shuffled = list(scheds)
+    rnd.shuffle(shuffled)
+    assert fleet_serve_snapshot(shuffled) == merged
+
+    everything = _registry((
+        [i for ops in shard_ops for i in ops[0]],
+        0.0,                                  # gauges handled below
+        [v for ops in shard_ops for v in ops[2]],
+    )).snapshot(prefix="serve.")
+    assert merged["serve.steps"] == everything["serve.steps"]
+    assert (merged["serve.step_ms"]["counts"]
+            == everything["serve.step_ms"]["counts"])
+    np.testing.assert_allclose(merged["serve.step_ms"]["total"],
+                               everything["serve.step_ms"]["total"],
+                               rtol=1e-12)
+    # every shard set its gauge once (seq=1), so the merged gauge is the
+    # tie-broken max — deterministic and equal to the plain max of values
+    assert (merged["serve.queue_depth_now"]["value"]
+            == max(ops[1] for ops in shard_ops))
+
+
+def test_merge_matches_scheduler_registry_names():
+    """Non-hypothesis smoke: merging two real merge_snapshots inputs with
+    disjoint and overlapping names keeps the union (a shard that never
+    evicted still contributes its other counters)."""
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.counter("serve.steps").inc(3)
+    a.counter("serve.page_evictions").inc(1)
+    b.counter("serve.steps").inc(4)
+    merged = merge_snapshots(a.snapshot(), b.snapshot())
+    assert merged["serve.steps"]["value"] == 7
+    assert merged["serve.page_evictions"]["value"] == 1

@@ -99,6 +99,9 @@ class TestCellCompilation:
     sharded step fn — at smoke scale on the CPU mesh here; the production
     512-device pass is `python -m repro.launch.dryrun` (EXPERIMENTS.md)."""
 
+    # ~40 XLA lower+compile invocations: excluded from the quick tier-1
+    # loop (-m "not slow"); the tier1-multidevice lane runs it in full
+    @pytest.mark.slow
     @pytest.mark.parametrize("arch,shape", all_cells())
     def test_cell_lowers_and_compiles(self, arch, shape):
         mesh = make_cpu_mesh()
